@@ -1,0 +1,56 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines (plus each figure's
+detailed CSV) and writes artifacts under benchmarks/artifacts/.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+ART = Path(__file__).resolve().parent / "artifacts"
+
+
+def _run(name: str, fn) -> list[str]:
+    t0 = time.perf_counter()
+    rows = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.csv").write_text("\n".join(rows))
+    derived = rows[-1].replace(",", ";") if rows else ""
+    print(f"{name},{us:.0f},{derived}")
+    for r in rows:
+        print(f"  {r}")
+    return rows
+
+
+def main() -> None:
+    from benchmarks import (bench_access_patterns, bench_bandwidth_profile,
+                            bench_debug_iteration, bench_hls4ml_scaling)
+    from benchmarks import roofline as roofline_mod
+
+    print("name,us_per_call,derived")
+    _run("fig5_debug_iteration", bench_debug_iteration.run)
+    _run("fig7_hls4ml_scaling", bench_hls4ml_scaling.run)
+    _run("fig8_bandwidth_profile", bench_bandwidth_profile.run)
+    _run("fig9_access_patterns", bench_access_patterns.run)
+
+    def _roofline():
+        recs = roofline_mod.load("baseline")
+        (ART / "dryrun_table.md").write_text(
+            roofline_mod.render_dryrun_table(recs))
+        (ART / "roofline_table.md").write_text(
+            roofline_mod.render_roofline_table(recs))
+        return [f"roofline,baseline_cells,{len(recs)}",
+                "roofline,tables,dryrun_table.md;roofline_table.md"]
+
+    _run("roofline_tables", _roofline)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-parameter llama-family model on the
+synthetic induction-LM dataset with the full production stack — jitted
+fwd+bwd+AdamW step, background data pipeline, async sharded checkpoints,
+fault-tolerant restart, straggler monitoring, register-file run control.
+
+    PYTHONPATH=src python examples/quickstart.py [--steps 300] [--resume]
+    PYTHONPATH=src python examples/quickstart.py --arch llama3.2-1b --smoke
+
+A few hundred steps on the default config drives loss well below the
+unigram entropy (the dataset plants copy/induction structure).
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config, smoke
+from repro.configs.base import ModelConfig
+from repro.models.transformer import RunFlags
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import FailureInjector, Trainer, TrainerConfig
+
+# ~102M parameters
+CONFIG_100M = ModelConfig(
+    arch="quickstart-100m", family="dense", n_layers=10, d_model=640,
+    n_heads=8, n_kv_heads=4, head_dim=80, d_ff=2560, vocab_size=32000,
+    mlp_type="swiglu", rope="full", causal=True, tie_embeddings=False,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--arch", default=None,
+                    help="train a smoke-reduced assigned arch instead")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--inject-failure", type=int, default=None,
+                    help="inject a transient fault at this step "
+                         "(demonstrates checkpoint/restart)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart")
+    args = ap.parse_args()
+
+    if args.arch:
+        cfg = get_config(args.arch)
+        if args.smoke:
+            cfg = smoke(cfg)
+    else:
+        cfg = CONFIG_100M
+
+    from repro.configs import count_params
+    print(f"model: {cfg.arch}  params={count_params(cfg)/1e6:.1f}M")
+
+    tcfg = TrainerConfig(seq_len=args.seq_len, global_batch=args.batch,
+                         steps=args.steps, ckpt_every=50,
+                         ckpt_dir=args.ckpt_dir,
+                         log_path=str(Path(args.ckpt_dir) / "metrics.jsonl"))
+    inj = FailureInjector(fail_steps=[args.inject_failure]) \
+        if args.inject_failure else None
+    trainer = Trainer(
+        cfg, tcfg,
+        flags=RunFlags(attn_impl="chunked", q_chunk=128, kv_chunk=128,
+                       microbatches=1),
+        opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=20,
+                            total_steps=args.steps),
+        failure_injector=inj)
+
+    state, step = trainer.train(resume=args.resume)
+    log = trainer.metrics_log
+    print(f"\ntrained to step {step}; restarts={trainer.restarts}; "
+          f"stragglers={len(trainer.straggler.events)}")
+    if log:
+        for r in log[:: max(1, len(log) // 12)]:
+            print(f"  step {r['step']:4d}  loss {r['loss']:.4f}  "
+                  f"lr {r['lr']:.2e}  {r['step_time']*1e3:.0f} ms")
+        print(f"  final loss: {log[-1]['loss']:.4f} "
+              f"(first: {log[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

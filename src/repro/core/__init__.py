@@ -1,0 +1,23 @@
+"""FireBridge core: the paper's contribution as a composable subsystem.
+
+  registers     — fb_read_32/fb_write_32 CSR protocol (paper §IV-A)
+  transactions  — burst log + bandwidth/heatmap profiling (Figs. 8, 9)
+  bridge        — DDR memory bridge + multi-backend accelerator launch (§IV)
+  congestion    — seeded interconnect contention / DoS emulator (§IV-C)
+  equivalence   — oracle ≡ interpret ≡ compiled checking w/ localization
+  coverify      — one-call co-verification driver (debug-iteration unit)
+  hlo_profiler  — compiled-HLO transaction extraction + roofline terms
+"""
+from repro.core.bridge import Buffer, FireBridge, MemoryBridge
+from repro.core.congestion import CongestionConfig, CongestionResult, simulate
+from repro.core.coverify import CoverifyResult, coverify
+from repro.core.equivalence import EquivalenceReport, check_equivalence
+from repro.core.registers import DOORBELL, RO, RW, W1C, RegisterFile
+from repro.core.transactions import Transaction, TransactionLog
+
+__all__ = [
+    "Buffer", "FireBridge", "MemoryBridge", "CongestionConfig",
+    "CongestionResult", "simulate", "CoverifyResult", "coverify",
+    "EquivalenceReport", "check_equivalence", "RegisterFile", "RO", "RW",
+    "W1C", "DOORBELL", "Transaction", "TransactionLog",
+]

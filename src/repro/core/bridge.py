@@ -1,0 +1,130 @@
+"""The FireBridge memory bridge (paper §IV, Fig. 3).
+
+Host-side firmware sees "DDR" as plain arrays (idiomatic-C-style pointer
+access in the paper; NumPy views here).  The accelerator side — a Pallas
+kernel in interpret mode ("RTL sim"), its jnp oracle ("golden model"), or
+the compiled XLA executable ("deployment") — accesses the same buffers
+through the bridge, which logs every burst as a Transaction.  The SAME
+firmware function runs unmodified against every backend; that is the
+paper's equivalence guarantee, checked by core/equivalence.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.registers import RegisterFile
+from repro.core.transactions import Transaction, TransactionLog
+
+
+@dataclasses.dataclass
+class Buffer:
+    name: str
+    addr: int
+    array: np.ndarray
+
+    @property
+    def nbytes(self) -> int:
+        return self.array.nbytes
+
+
+class MemoryBridge:
+    """Host DDR pool with transaction-logged accelerator access."""
+
+    PAGE = 4096
+
+    def __init__(self, log: Optional[TransactionLog] = None) -> None:
+        self.log = log if log is not None else TransactionLog()
+        self._next = 0x1000_0000                    # DDR base
+        self.buffers: Dict[str, Buffer] = {}
+        self.time = 0.0
+
+    def alloc(self, name: str, shape, dtype) -> Buffer:
+        arr = np.zeros(shape, dtype)
+        size = -(-arr.nbytes // self.PAGE) * self.PAGE
+        buf = Buffer(name, self._next, arr)
+        self._next += size
+        self.buffers[name] = buf
+        return buf
+
+    # Firmware-side access: plain numpy (paper: dereferencing C pointers).
+    def host_write(self, name: str, data) -> None:
+        buf = self.buffers[name]
+        np.copyto(buf.array, np.asarray(data, buf.array.dtype))
+
+    def host_read(self, name: str) -> np.ndarray:
+        return self.buffers[name].array.copy()
+
+    # Accelerator-side access: transaction-logged bursts.
+    def dev_read(self, name: str, engine: str = "dma") -> np.ndarray:
+        buf = self.buffers[name]
+        self.time += 1
+        self.log.log(Transaction(self.time, engine, "read", buf.addr,
+                                 buf.nbytes, tag=name))
+        return buf.array.copy()
+
+    def dev_write(self, name: str, data, engine: str = "dma") -> None:
+        buf = self.buffers[name]
+        self.time += 1
+        self.log.log(Transaction(self.time, engine, "write", buf.addr,
+                                 buf.nbytes, tag=name))
+        np.copyto(buf.array, np.asarray(data, buf.array.dtype))
+
+    def log_burst_list(self, txs: List[Tuple[str, str, int, int]],
+                       base_time: Optional[float] = None) -> None:
+        """Log a kernel's static BlockSpec-derived burst list (see
+        kernels/systolic_matmul/ops.transactions)."""
+        t = self.time if base_time is None else base_time
+        for engine, kind, addr, nbytes in txs:
+            t += 1
+            self.log.log(Transaction(t, engine, kind, addr, nbytes))
+        self.time = t
+
+
+class FireBridge:
+    """Top-level co-verification environment: registers + memory bridge +
+    switchable accelerator backends (paper Fig. 1c)."""
+
+    BACKENDS = ("oracle", "interpret", "compiled")
+
+    def __init__(self, name: str = "fb") -> None:
+        self.log = TransactionLog()
+        self.mem = MemoryBridge(self.log)
+        self.csr = RegisterFile(f"{name}.csr", self.log)
+        self._ops: Dict[str, Dict[str, Callable]] = {}
+
+    def register_op(self, name: str, *, oracle: Callable,
+                    interpret: Optional[Callable] = None,
+                    compiled: Optional[Callable] = None,
+                    burst_list: Optional[Callable] = None) -> None:
+        """An accelerator operation with up to three functionally-equivalent
+        backends + an optional static burst-list derivation."""
+        self._ops[name] = {
+            "oracle": oracle,
+            "interpret": interpret or oracle,
+            # callers pass an explicitly jitted fn for the compiled backend;
+            # default falls back to the oracle (still XLA under the hood).
+            "compiled": compiled or oracle,
+            "burst_list": burst_list,
+        }
+
+    def launch(self, op: str, backend: str, in_bufs: List[str],
+               out_bufs: List[str], engine: str = "accel",
+               burst_list: Optional[Callable] = None, **kw) -> None:
+        """Run one accelerator op against named DDR buffers, logging the
+        transaction stream.  `burst_list` (here or at register_op) derives
+        the tile-level DMA bursts from the kernel's BlockSpec schedule."""
+        assert backend in self.BACKENDS, backend
+        fns = self._ops[op]
+        args = [self.mem.dev_read(n, engine=f"{engine}_rd") for n in in_bufs]
+        bl = burst_list or fns["burst_list"]
+        if bl is not None:
+            self.mem.log_burst_list(bl())
+        outs = fns[backend](*args, **kw)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for name, o in zip(out_bufs, outs):
+            self.mem.dev_write(name, np.asarray(o), engine=f"{engine}_wr")

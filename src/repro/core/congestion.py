@@ -1,0 +1,123 @@
+"""Memory-congestion emulator (paper §IV-C).
+
+The paper randomizes AXI handshake signals to stress protocol handling.  The
+TPU-side adaptation replays a transaction stream through a parameterized
+shared-link model with seeded random denial-of-service: engines contend for
+interconnect bandwidth, acquire stalls, and the resulting per-engine stall
+statistics are the Fig. 8 "memory stalls" series.  Deterministic under a
+seed, so congestion regressions are testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.transactions import Transaction, TransactionLog
+
+
+@dataclasses.dataclass(frozen=True)
+class CongestionConfig:
+    link_bytes_per_cycle: float = 128.0     # shared interconnect width
+    base_latency: float = 40.0              # cycles per burst (DDR-ish)
+    dos_prob: float = 0.0                   # P(denial-of-service per tx)
+    dos_stall: float = 200.0                # cycles withheld on DoS
+    per_engine_issue_gap: float = 1.0       # min cycles between issues
+    seed: int = 0
+    # interconnect arbitration priority per engine (higher wins when
+    # contending; ties round-robin) — the paper's "input DMA was given
+    # higher priority" experiment (Fig. 8).
+    priorities: tuple = ()                  # of (engine, prio) pairs
+
+
+@dataclasses.dataclass
+class CongestionResult:
+    makespan: float
+    per_engine_stall: Dict[str, float]
+    per_engine_busy: Dict[str, float]
+    link_utilization: float
+    timeline: List[Transaction]
+
+    def summary(self) -> dict:
+        return {
+            "makespan": self.makespan,
+            "link_utilization": round(self.link_utilization, 4),
+            "stalls": {k: round(v, 1) for k, v in
+                       sorted(self.per_engine_stall.items())},
+        }
+
+
+def simulate(txs: List[Transaction], cfg: CongestionConfig,
+             log: Optional[TransactionLog] = None) -> CongestionResult:
+    """Replay transactions through one shared link, round-robin arbitration.
+
+    Transactions must be in per-engine program order; `time` fields are used
+    as minimum issue times (0 = ASAP).  Mutates tx.stall/tx.complete.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    queues: Dict[str, List[Transaction]] = defaultdict(list)
+    for t in txs:
+        queues[t.engine].append(t)
+    heads = {e: 0 for e in queues}
+    ready = {e: 0.0 for e in queues}
+    link_free = 0.0
+    busy: Dict[str, float] = defaultdict(float)
+    stall: Dict[str, float] = defaultdict(float)
+    total_bytes = 0
+    done: List[Transaction] = []
+
+    prio = dict(cfg.priorities)
+    engines = sorted(queues, key=lambda e: (-prio.get(e, 0), e))
+    rr = 0
+    while any(heads[e] < len(queues[e]) for e in engines):
+        # highest-priority engine with pending work; ties round-robin
+        pending = [e for e in engines if heads[e] < len(queues[e])]
+        top = max(prio.get(e, 0) for e in pending)
+        cand = [e for e in pending if prio.get(e, 0) == top]
+        e = cand[rr % len(cand)]
+        rr += 1
+        tx = queues[e][heads[e]]
+        heads[e] += 1
+        issue = max(ready[e], tx.time)
+        start = max(issue, link_free)
+        wait = start - issue
+        dos = 0.0
+        if cfg.dos_prob > 0 and rng.random() < cfg.dos_prob:
+            dos = cfg.dos_stall
+        xfer = cfg.base_latency + tx.nbytes / cfg.link_bytes_per_cycle
+        tx.stall = wait + dos
+        tx.complete = start + dos + xfer
+        link_free = tx.complete
+        ready[e] = tx.complete + cfg.per_engine_issue_gap
+        busy[e] += xfer
+        stall[e] += tx.stall
+        total_bytes += tx.nbytes
+        done.append(tx)
+        if log is not None:
+            log.log(tx)
+
+    makespan = max((t.complete for t in done), default=0.0)
+    util = (total_bytes / cfg.link_bytes_per_cycle) / makespan if makespan else 0.0
+    return CongestionResult(
+        makespan=makespan,
+        per_engine_stall=dict(stall),
+        per_engine_busy=dict(busy),
+        link_utilization=util,
+        timeline=done,
+    )
+
+
+def collective_stream_to_txs(collectives, time_scale: float = 1.0
+                             ) -> List[Transaction]:
+    """Adapt an hlo_profiler collective stream into congestion-model
+    transactions (engine = collective kind): stress-replays the compiled
+    program's communication schedule under contention."""
+    txs = []
+    t = 0.0
+    for c in collectives:
+        for r in range(min(c.multiplier, 1000)):    # cap replay length
+            txs.append(Transaction(t, c.kind, "read", 0, c.bytes_moved))
+            t += time_scale
+    return txs

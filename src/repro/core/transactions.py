@@ -1,0 +1,112 @@
+"""Transaction records + profiling (paper Figs. 8 and 9).
+
+A Transaction is one logical memory burst: a DMA tile fetch (kernel
+BlockSpec-derived), a register access, or a host<->device transfer.  The
+TransactionLog renders bandwidth-utilization timelines and address/time
+heatmaps — the TPU-side analogue of FireBridge's AXI monitors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Transaction:
+    time: float                 # issue time (cycles or seconds — caller's unit)
+    engine: str                 # "dma_a", "host", "csr", ...
+    kind: str                   # "read" | "write"
+    addr: int
+    nbytes: int
+    tag: str = ""
+    stall: float = 0.0          # stall time injected by the congestion model
+    complete: float = 0.0       # completion time (filled by congestion model)
+
+
+class TransactionLog:
+    def __init__(self) -> None:
+        self.txs: List[Transaction] = []
+        self.violations: List[str] = []
+
+    def log(self, tx: Transaction) -> None:
+        self.txs.append(tx)
+
+    def extend(self, txs: Iterable[Transaction]) -> None:
+        self.txs.extend(txs)
+
+    def violation(self, msg: str) -> None:
+        self.violations.append(msg)
+
+    # ------------------------------------------------------------ queries
+    def total_bytes(self, engine: Optional[str] = None) -> int:
+        return sum(t.nbytes for t in self.txs
+                   if engine is None or t.engine == engine)
+
+    def engines(self) -> List[str]:
+        return sorted({t.engine for t in self.txs})
+
+    def total_stalls(self, engine: Optional[str] = None) -> float:
+        return sum(t.stall for t in self.txs
+                   if engine is None or t.engine == engine)
+
+    # ------------------------------------------------------- Fig 8 analogue
+    def bandwidth_timeline(self, n_buckets: int = 50,
+                           by_engine: bool = True
+                           ) -> Tuple[np.ndarray, Dict[str, np.ndarray]]:
+        """Returns (bucket_edges, {engine: bytes_per_bucket})."""
+        if not self.txs:
+            return np.zeros(1), {}
+        stamp = lambda t: t.complete if t.complete else t.time
+        t_end = max(stamp(t) for t in self.txs) or 1.0
+        edges = np.linspace(0.0, t_end, n_buckets + 1)
+        out: Dict[str, np.ndarray] = defaultdict(
+            lambda: np.zeros(n_buckets))
+        for t in self.txs:
+            b = min(int(stamp(t) / t_end * n_buckets), n_buckets - 1)
+            out[t.engine if by_engine else "all"][b] += t.nbytes
+        return edges, dict(out)
+
+    # ------------------------------------------------------- Fig 9 analogue
+    def heatmap(self, addr_bins: int = 32, time_bins: int = 64,
+                kind: Optional[str] = None) -> np.ndarray:
+        """(addr_bins, time_bins) access-count heatmap."""
+        txs = [t for t in self.txs if kind is None or t.kind == kind]
+        hm = np.zeros((addr_bins, time_bins))
+        if not txs:
+            return hm
+        t_end = max(t.time for t in txs) or 1.0
+        a_end = max(t.addr + t.nbytes for t in txs) or 1
+        for t in txs:
+            ai = min(int(t.addr / a_end * addr_bins), addr_bins - 1)
+            ti = min(int(t.time / t_end * time_bins), time_bins - 1)
+            hm[ai, ti] += t.nbytes
+        return hm
+
+    def render_heatmap(self, addr_bins: int = 24, time_bins: int = 64,
+                       kind: Optional[str] = None) -> str:
+        """ASCII heatmap (density ramp) for terminal/benchmark output."""
+        hm = self.heatmap(addr_bins, time_bins, kind)
+        ramp = " .:-=+*#%@"
+        mx = hm.max() or 1.0
+        lines = []
+        for row in hm[::-1]:                       # high addresses on top
+            lines.append("".join(
+                ramp[min(int(v / mx * (len(ramp) - 1)), len(ramp) - 1)]
+                for v in row))
+        return "\n".join(lines)
+
+    def summary(self) -> Dict[str, dict]:
+        out = {}
+        for e in self.engines():
+            txs = [t for t in self.txs if t.engine == e]
+            out[e] = {
+                "transactions": len(txs),
+                "bytes": sum(t.nbytes for t in txs),
+                "reads": sum(1 for t in txs if t.kind == "read"),
+                "writes": sum(1 for t in txs if t.kind == "write"),
+                "stall": sum(t.stall for t in txs),
+            }
+        return out

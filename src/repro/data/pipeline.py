@@ -1,0 +1,60 @@
+"""Host data pipeline: background prefetch + device placement.
+
+Double-buffers batches on a worker thread (host-side "DMA engine"); every
+produced batch is transaction-logged when a bridge is attached, so data-path
+stalls show up in the same Fig. 8-style profile as accelerator traffic.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core.transactions import Transaction, TransactionLog
+
+
+class DataPipeline:
+    def __init__(self, dataset, start_step: int = 0, prefetch: int = 2,
+                 shardings: Any = None,
+                 log: Optional[TransactionLog] = None):
+        self.dataset = dataset
+        self.shardings = shardings
+        self.log = log
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.dataset.batch(step)
+            if self.shardings is not None:
+                batch = jax.device_put(batch, self.shardings)
+            try:
+                self._q.put((step, batch), timeout=1.0)
+            except queue.Full:
+                if self._stop.is_set():
+                    return
+                continue
+            step += 1
+
+    def next(self):
+        step, batch = self._q.get()
+        if self.log is not None:
+            nbytes = sum(v.nbytes for v in jax.tree.leaves(batch))
+            self.log.log(Transaction(float(step), "host_data", "read", 0,
+                                     nbytes, tag=f"step{step}"))
+        return step, batch
+
+    def stop(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

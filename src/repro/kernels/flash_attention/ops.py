@@ -1,0 +1,57 @@
+"""Jit-facing wrapper: custom-VJP flash attention backed by the Pallas
+kernels, with model-layout (B, S, H, D) in/out and backend dispatch
+(interpret=True off-TPU, compiled kernel on TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as K
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, window, bq, bk):
+    out, _ = K.flash_fwd(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                         interpret=_interpret_default())
+    return out
+
+
+def _fwd(q, k, v, causal, window, bq, bk):
+    out, lse = K.flash_fwd(q, k, v, causal=causal, window=window, bq=bq,
+                           bk=bk, interpret=_interpret_default())
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, bq, bk, res, dout):
+    q, k, v, out, lse = res
+    interp = _interpret_default()
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                                    # (B,H,Sq)
+    dk, dv = K.flash_dkdv(q, k, v, dout, lse, delta, causal=causal,
+                          window=window, bq=bq, bk=bk, interpret=interp)
+    dq = K.flash_dq(q, k, v, dout, lse, delta, causal=causal, window=window,
+                    bq=bq, bk=bk, interpret=interp)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_fwd, _bwd)
+
+
+def flash_attention(q, k, v, *, q_pos=None, kv_pos=None, causal=True,
+                    window=0, bq=512, bk=512):
+    """Model-layout entry point: q (B,S,H,D), k/v (B,S,KH,D).
+
+    Positions are assumed to be arange (self-attention); q_pos/kv_pos are
+    accepted for interface parity with repro.models.attention and ignored.
+    """
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _flash(qt, kt, vt, causal, window, bq, bk)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid (B, H/hb, L/cl) with the chunk index minor-most: the (hb, P, N) f32
+state lives in VMEM scratch and is carried across chunks — HBM traffic is
+exactly one read of x/dt/B/C and one write of y (+ one final state write),
+vs. the lax twin whose per-chunk state round-trips through HBM.
+
+All exponent arguments are <= 0 (SSD property), so the kernel is
+overflow-safe in f32 without rescaling tricks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, B_ref, C_ref, A_ref, D_ref, y_ref, st_ref,
+                state_s, *, nc: int, cl: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_s[...] = jnp.zeros_like(state_s)
+
+    x = x_ref[0].astype(jnp.float32)          # (cl, hb, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (cl, hb)
+    B_ = B_ref[0].astype(jnp.float32)         # (cl, N)
+    C_ = C_ref[0].astype(jnp.float32)         # (cl, N)
+    A = A_ref[...].astype(jnp.float32)        # (hb,)
+    D = D_ref[...].astype(jnp.float32)        # (hb,)
+    state = state_s[...]                      # (hb, P, N)
+
+    dA = dt * A[None, :]                      # (cl, hb) <= 0
+    cum = jnp.cumsum(dA, axis=0)
+    CB = jax.lax.dot_general(C_, B_, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (cl, cl)
+    seg = cum[:, None, :] - cum[None, :, :]   # (cl, cl, hb), i >= j ok
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    causal = (jj <= ii)[:, :, None]
+    M = CB[:, :, None] * jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+    M = M * dt[None, :, :]                    # weight by dt_j
+    # y_intra[i,h,p] = sum_j M[i,j,h] x[j,h,p]  (batched over h)
+    Mh = M.transpose(2, 0, 1)                 # (hb, cl, cl)
+    xh = x.transpose(1, 0, 2)                 # (hb, cl, P)
+    y_h = jax.lax.dot_general(Mh, xh, (((2,), (1,)), ((0,), (0,))),
+                              preferred_element_type=jnp.float32)  # (hb,cl,P)
+    # y_inter[i,h,p] = exp(cum[i,h]) * sum_n C[i,n] state[h,p,n]
+    Cst = jax.lax.dot_general(
+        C_, state.reshape(state.shape[0] * state.shape[1], state.shape[2]),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    Cst = Cst.reshape(cl, state.shape[0], state.shape[1])  # (cl, hb, P)
+    y = y_h.transpose(1, 0, 2) + Cst * jnp.exp(cum)[:, :, None]
+    y = y + D[None, :, None] * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update
+    decay_end = jnp.exp(cum[-1])              # (hb,)
+    w = dt * jnp.exp(cum[-1][None, :] - cum)  # (cl, hb)
+    xw = (x * w[:, :, None]).transpose(1, 2, 0)         # (hb, P, cl)
+    upd = jax.lax.dot_general(xw, B_, (((2,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (hb,P,N)
+    state_s[...] = state * decay_end[:, None, None] + upd
+
+    @pl.when(c == nc - 1)
+    def _done():
+        st_ref[0] = state_s[...]
+
+
+def ssd_scan(x, dt, B_, C_, A, D, *, chunk: int = 128, hb: int = 8,
+             interpret: bool = True):
+    """x (B,L,H,P); dt (B,L,H) f32; B_/C_ (B,L,N); A/D (H,) f32.
+    Returns (y (B,L,H,P) f32, final_state (B,H,P,N) f32)."""
+    B, L, H, P = x.shape
+    N = B_.shape[-1]
+    cl = min(chunk, L)
+    hb = min(hb, H)
+    assert L % cl == 0 and H % hb == 0
+    grid = (B, H // hb, L // cl)
+    y, st = pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=grid[2], cl=cl),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cl, hb, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, cl, hb), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, cl, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, cl, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((hb,), lambda b, h, c: (h,)),
+            pl.BlockSpec((hb,), lambda b, h, c: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cl, hb, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B_, C_, A, D)
+    return y, st

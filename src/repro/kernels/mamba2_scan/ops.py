@@ -1,0 +1,11 @@
+"""Jit wrapper for the SSD scan kernel with backend dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mamba2_scan.kernel import ssd_scan as _ssd_scan
+
+
+def ssd_scan(x, dt, B_, C_, A, D, *, chunk=128, hb=8):
+    return _ssd_scan(x, dt, B_, C_, A, D, chunk=chunk, hb=hb,
+                     interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,29 @@
+"""Per-timestep recurrence oracle for the SSD scan kernel (exact, slow)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, B_, C_, A, D):
+    """x (B,L,H,P); dt (B,L,H); B_/C_ (B,L,N); A/D (H,).
+    state_t = state * exp(dt_t A) + dt_t * x_t outer B_t;
+    y_t = C_t . state_t + D * x_t."""
+    Bsz, L, H, P = x.shape
+    N = B_.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B_.astype(jnp.float32)
+    Cf = C_.astype(jnp.float32)
+
+    def step(state, t):
+        xt, dtt, bt, ct = xf[:, t], dtf[:, t], Bf[:, t], Cf[:, t]
+        decay = jnp.exp(dtt * A[None, :])                       # (B,H)
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bn,bhp->bhpn", bt, xt * dtt[..., None])
+        y = jnp.einsum("bn,bhpn->bhp", ct, state) + D[None, :, None] * xt
+        return state, y
+
+    state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, jnp.arange(L))
+    return ys.transpose(1, 0, 2, 3), state

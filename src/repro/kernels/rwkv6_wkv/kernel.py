@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the RWKV-6 WKV recurrence (data-dependent decay).
+
+Grid (B, H/hb, L/cl), chunk index minor-most; the (hb, K, V) f32 state is
+VMEM-resident across chunks.  Within a chunk the exact per-step recurrence
+runs in registers/VMEM via fori_loop — per-channel decays make the
+linear-attention q/k exp-factorisation overflow-prone (see
+repro/models/rwkv6.py), so the kernel keeps the exact form; the win over the
+lax twin is purely memory locality (state never round-trips to HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, st_ref, state_s, *,
+                nc: int, cl: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_s[...] = jnp.zeros_like(state_s)
+
+    r = r_ref[0].astype(jnp.float32)          # (cl, hb, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)          # decay in (0,1)
+    u = u_ref[...].astype(jnp.float32)        # (hb, K)
+
+    def step(t, carry):
+        state, ys = carry
+        rt, kt, vt, wt = r[t], k[t], v[t], w[t]          # (hb, K)
+        kv = kt[:, :, None] * vt[:, None, :]             # (hb, K, V)
+        out = jnp.sum(rt[:, :, None] * (state + u[:, :, None] * kv), axis=1)
+        state = wt[:, :, None] * state + kv
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, out[None], t, axis=0)
+        return state, ys
+
+    ys0 = jnp.zeros((cl,) + v.shape[1:], jnp.float32)
+    state, ys = jax.lax.fori_loop(0, cl, step, (state_s[...], ys0))
+    state_s[...] = state
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _done():
+        st_ref[0] = state_s[...]
+
+
+def wkv_scan(r, k, v, w, u, *, chunk: int = 16, hb: int = 8,
+             interpret: bool = True):
+    """r/k/v/w (B,L,H,K); u (H,K).  w is the per-step decay in (0,1).
+    Returns (y (B,L,H,K) f32, final_state (B,H,K,K) f32)."""
+    B, L, H, K = r.shape
+    cl = min(chunk, L)
+    hb = min(hb, H)
+    assert L % cl == 0 and H % hb == 0
+    grid = (B, H // hb, L // cl)
+    y, st = pl.pallas_call(
+        functools.partial(_wkv_kernel, nc=grid[2], cl=cl),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cl, hb, K), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, cl, hb, K), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, cl, hb, K), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, cl, hb, K), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((hb, K), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cl, hb, K), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, hb, K, K), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, K), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, K, K), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y, st

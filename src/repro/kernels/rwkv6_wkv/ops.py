@@ -1,0 +1,11 @@
+"""Jit wrapper for the WKV-6 kernel with backend dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6_wkv.kernel import wkv_scan as _wkv_scan
+
+
+def wkv_scan(r, k, v, w, u, *, chunk=16, hb=8):
+    return _wkv_scan(r, k, v, w, u, chunk=chunk, hb=hb,
+                     interpret=jax.default_backend() != "tpu")

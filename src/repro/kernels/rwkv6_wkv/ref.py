@@ -1,0 +1,25 @@
+"""Per-timestep oracle for the WKV-6 recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_scan_ref(r, k, v, w, u):
+    """r/k/v/w (B,L,H,K); u (H,K).
+    out_t = r_t . (S + u * k_t v_t^T); S = diag(w_t) S + k_t v_t^T."""
+    B, L, H, K = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, t):
+        rt, kt, vt, wt = rf[:, t], kf[:, t], vf[:, t], wf[:, t]
+        kv = kt[..., None] * vt[..., None, :]             # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         state + uf[None, :, :, None] * kv)
+        state = wt[..., None] * state + kv
+        return state, out
+
+    state0 = jnp.zeros((B, H, K, K), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, jnp.arange(L))
+    return ys.transpose(1, 0, 2, 3), state

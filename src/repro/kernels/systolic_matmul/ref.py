@@ -1,0 +1,8 @@
+"""Oracle for the systolic matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)

@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not move them.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import (SHAPES, applicable_shapes, get_config,  # noqa: E402
+                           list_archs, non_embedding_params)
+from repro.core import hlo_profiler  # noqa: E402
+from repro.launch.mesh import make_ctx, make_production_mesh  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.models.transformer import (RunFlags, make_decode_fn,  # noqa: E402
+                                      make_loss_fn, make_prefill_fn)
+
+ART_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS per the assignment: 6·N·D train (N active for MoE),
+    2·N·D forward-only (prefill), 2·N per token (decode)."""
+    n = non_embedding_params(cfg, active_only=cfg.moe is not None)
+    if kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token per seq
+
+
+def build_lowered(cfg, shape, mesh, ctx, flags: RunFlags,
+                  zero_level: int = -1):
+    kind = shape.kind
+    if kind == "train":
+        if zero_level < 0:      # auto: FSDP masters when ZeRO-1 won't fit
+            zero_level = 1
+            if steps_lib.train_state_bytes_per_device(cfg, mesh, 1) > 6e9:
+                zero_level = 3
+        # auto grad accumulation: bound activation live-set per microbatch
+        # to ~4096 tokens/device (1M-token global batches always accumulate)
+        ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dsize = mesh.devices.size // ax["model"]
+        tok_dev = shape.global_batch * shape.seq_len // dsize
+        want_nm = max(flags.microbatches, tok_dev // 4096)
+        while shape.global_batch % want_nm:
+            want_nm += 1
+        if want_nm != flags.microbatches:
+            flags = dataclasses.replace(flags, microbatches=want_nm)
+        st_shape, st_sh, b_shape, b_sh, gshard = steps_lib.train_shardings(
+            cfg, shape, mesh, ctx, zero_level=zero_level)
+        step = steps_lib.make_train_step(cfg, flags, ctx,
+                                         grad_shardings=gshard)
+        jitted = jax.jit(step, in_shardings=(st_sh, b_sh), donate_argnums=0)
+        return jitted.lower(st_shape, b_shape), zero_level, flags
+    if kind == "prefill":
+        p_shape, p_sh, b_shape, b_sh = steps_lib.prefill_shardings(
+            cfg, shape, mesh, ctx)
+        step = make_prefill_fn(cfg, flags, ctx, max_len=shape.seq_len)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        return jitted.lower(p_shape, b_shape), 0, flags
+    # decode
+    p_shape, p_sh, c_shape, c_sh, t_shape, t_sh = steps_lib.decode_shardings(
+        cfg, shape, mesh, ctx)
+    step = make_decode_fn(cfg, flags, ctx)
+    jitted = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh), donate_argnums=1)
+    return jitted.lower(p_shape, c_shape, t_shape), 0, flags
+
+
+def mem_fields(compiled, text=None):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                out[f] = int(v)
+    except Exception as e:  # CPU backend may not support all fields
+        out["error"] = str(e)
+    if text is not None:
+        out["cpu_f32_convert_artifact_bytes"] = _convert_artifacts(text)
+    return out
+
+
+def _convert_artifacts(text: str) -> int:
+    """XLA-CPU rewrites bf16 dot operands as (often loop-hoisted) f32
+    conversions — a backend emitter detail; TPU feeds bf16 to the MXU
+    natively.  Sum the distinct large f32 buffers that have a bf16 twin of
+    the same shape in the module so the HBM fit can be reported both raw
+    and TPU-corrected (EXPERIMENTS.md §Dry-run caveat)."""
+    import re as _re
+    total = 0
+    seen = set()
+    for m in _re.finditer(r"= f32\[([\d,]+)\]", text):
+        dims = m.group(1)
+        if dims in seen:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 < 256e6:
+            continue
+        if f"bf16[{dims}]" in text:
+            seen.add(dims)
+            total += n * 4
+    return int(total)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             flags: RunFlags, tag: str = "baseline",
+             save_text: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = make_ctx(mesh)
+    world = mesh.devices.size
+
+    t0 = time.time()
+    lowered, zero_level, flags = build_lowered(cfg, shape, mesh, ctx, flags)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        cost = {k: float(ca[k]) for k in ("flops", "bytes accessed") if k in ca}
+    except Exception as e:
+        cost = {"error": str(e)}
+
+    text = compiled.as_text()
+    prof = hlo_profiler.profile_hlo(text, world)
+    mf = model_flops(cfg, shape, shape.kind) / world
+    rl = hlo_profiler.roofline(prof, mf)
+    mem = mem_fields(compiled, text)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "world": world,
+        "tag": tag, "zero_level": zero_level,
+        "flags": dataclasses.asdict(flags),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis_raw": cost,
+        "profile": {
+            "hlo_flops_per_dev": prof.flops,
+            "hbm_traffic_bytes_per_dev": prof.traffic_bytes,
+            "collective_bytes_per_dev": prof.collective_bytes,
+            "dot_count": prof.dot_count,
+            "collective_summary": {k: {"count": c, "bytes": b}
+                                   for k, (c, b) in
+                                   prof.collective_summary().items()},
+            "warnings": prof.warnings[:20],
+        },
+        "roofline": {
+            "compute_s": rl.compute_s,
+            "memory_s": rl.memory_s,
+            "collective_s": rl.collective_s,
+            "dominant": rl.dominant,
+            "model_flops_per_dev": mf,
+            "useful_ratio": rl.useful_ratio,
+            "roofline_fraction": rl.roofline_fraction,
+        },
+    }
+    ART_DIR.mkdir(parents=True, exist_ok=True)
+    pods = "2pod" if multi_pod else "1pod"
+    out = ART_DIR / f"{arch}__{shape_name}__{pods}__{tag}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    if save_text:
+        (ART_DIR / f"{arch}__{shape_name}__{pods}__{tag}.hlo.txt").write_text(text)
+    return rec
+
+
+def flags_from_args(args) -> RunFlags:
+    return RunFlags(
+        attn_impl="chunked",
+        q_chunk=args.q_chunk, kv_chunk=args.kv_chunk,
+        skip_masked_tiles=args.skip_tiles,
+        microbatches=args.microbatches,
+        remat=not args.no_remat,
+        moe_mode=args.moe_mode,
+        wkv_chunk=args.wkv_chunk,
+        remat_policy=args.remat_policy,
+        sequence_parallel=args.seq_parallel,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run driver")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--kv-chunk", type=int, default=512)
+    ap.add_argument("--skip-tiles", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--moe-mode", default="pjit")
+    ap.add_argument("--wkv-chunk", type=int, default=16)
+    ap.add_argument("--remat-policy", default="full")
+    ap.add_argument("--seq-parallel", action="store_true")
+    args = ap.parse_args()
+    flags = flags_from_args(args)
+
+    cells = []
+    archs = [args.arch] if args.arch else list(list_archs())
+    for a in archs:
+        cfg = get_config(a)
+        app = applicable_shapes(cfg)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for s in shapes:
+            if app[s] != "OK":
+                print(f"SKIP  {a:24s} {s:12s} {app[s]}")
+                continue
+            cells.append((a, s))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    n_ok = n_fail = 0
+    for a, s in cells:
+        for mp in meshes:
+            name = f"{a:24s} {s:12s} {'2x16x16' if mp else '16x16'}"
+            try:
+                rec = run_cell(a, s, mp, flags, tag=args.tag,
+                               save_text=args.save_hlo)
+                rl = rec["roofline"]
+                print(f"OK    {name} compile={rec['compile_s']:7.1f}s "
+                      f"dom={rl['dominant']:10s} "
+                      f"comp={rl['compute_s']:.3e}s mem={rl['memory_s']:.3e}s "
+                      f"coll={rl['collective_s']:.3e}s "
+                      f"useful={rl['useful_ratio']:.2f}", flush=True)
+                n_ok += 1
+            except Exception as e:
+                print(f"FAIL  {name} {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc(limit=4)
+                n_fail += 1
+    print(f"\n{n_ok} OK, {n_fail} FAIL")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

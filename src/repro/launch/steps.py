@@ -1,0 +1,164 @@
+"""Step factories: train_step (fwd+bwd+AdamW, microbatched), prefill_step,
+decode_step — with full sharding wiring for jit/lower.
+
+These are the exact programs the dry-run lowers and the trainer/server
+executes; there is no separate "dry-run model".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import inputs as inputs_lib
+from repro.models.transformer import (RunFlags, ShardCtx, init_cache,
+                                      init_params, make_decode_fn,
+                                      make_loss_fn, make_prefill_fn)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.sharding.specs import (batch_specs, cache_specs, param_specs,
+                                  zero_specs)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_state(cfg: ModelConfig, key) -> dict:
+    params = init_params(cfg, key, dtype=jnp.float32)
+    opt = adamw_init(params)
+    return {"params": params, **opt}
+
+
+def train_state_shape(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda: make_train_state(cfg, jax.random.PRNGKey(0)))
+
+
+def make_train_step(cfg: ModelConfig, flags: RunFlags,
+                    ctx: Optional[ShardCtx],
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    grad_shardings: Any = None):
+    """grad_shardings: optional pytree of NamedShardings for the gradient
+    accumulator (ZeRO: data-axis sharded).  GSPMD then reduce-scatters the
+    data-parallel gradient sum instead of all-reducing it."""
+    loss_fn = make_loss_fn(cfg, flags, ctx)
+    nm = flags.microbatches
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def grads_of(b):
+            (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+            g = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+            if grad_shardings is not None:
+                g = jax.lax.with_sharding_constraint(g, grad_shardings)
+            return l, g
+
+        if nm == 1:
+            loss, grads = grads_of(batch)
+        else:
+            def resh(a):
+                a = a.reshape((nm, a.shape[0] // nm) + a.shape[1:])
+                if ctx is not None:
+                    a = jax.lax.with_sharding_constraint(
+                        a, NamedSharding(ctx.mesh, P(None, ctx.data_spec)))
+                return a
+
+            mb = jax.tree.map(resh, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+            def body(carry, b):
+                ls, gs = carry
+                l, g = grads_of(b)
+                gs = jax.tree.map(jnp.add, gs, g)
+                return (ls + l, gs), None
+
+            (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), g0), mb)
+            loss = loss / nm
+            grads = jax.tree.map(lambda g: g / nm, grads)
+
+        new_params, opt, info = adamw_update(
+            opt_cfg, params, grads,
+            {"m": state["m"], "v": state["v"], "step": state["step"]})
+        metrics = {"loss": loss, **info}
+        return {"params": new_params, **opt}, metrics
+
+    return train_step
+
+
+def train_state_bytes_per_device(cfg: ModelConfig, mesh, zero_level: int) -> float:
+    """Rough fit estimate: masters f32 + m/v f32 (+ bf16 cast transient)."""
+    st = train_state_shape(cfg)
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = ax["model"]
+    world = mesh.devices.size
+    pbytes = sum(l.size * 4 for l in jax.tree.leaves(st["params"]))
+    mv = 2 * pbytes / world if zero_level >= 1 else 2 * pbytes / msize
+    masters = pbytes / world if zero_level >= 3 else pbytes / msize
+    grads = pbytes / world if zero_level >= 1 else pbytes / msize
+    return masters + mv + grads
+
+
+def train_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    ctx: ShardCtx, zero_level: int = 1):
+    """zero_level: 0 = params/opt sharded on model only; 1 = moments + grad
+    accumulators additionally sharded over data (ZeRO-1); 3 = master params
+    too (GSPMD-FSDP)."""
+    st_shape = train_state_shape(cfg)
+    pspec = param_specs(cfg, st_shape["params"], mesh)
+    zspec = zero_specs(pspec, st_shape["params"], mesh, ctx.data_axes)
+    st_spec = {"params": zspec if zero_level >= 3 else pspec,
+               "m": zspec if zero_level >= 1 else pspec,
+               "v": zspec if zero_level >= 1 else pspec,
+               "step": P()}
+    b_shape = inputs_lib.train_input_specs(cfg, shape)
+    b_spec = batch_specs(cfg, b_shape, mesh, data_axes=ctx.data_axes)
+    sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    gshard = sh(zspec) if zero_level >= 1 else None
+    return st_shape, sh(st_spec), b_shape, sh(b_spec), gshard
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def serve_params_shape(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16))
+
+
+def prefill_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      ctx: ShardCtx):
+    p_shape = serve_params_shape(cfg)
+    p_spec = param_specs(cfg, p_shape, mesh)
+    b_shape = inputs_lib.prefill_input_specs(cfg, shape)
+    b_spec = batch_specs(cfg, b_shape, mesh, data_axes=ctx.data_axes)
+    sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return p_shape, sh(p_spec), b_shape, sh(b_spec)
+
+
+def decode_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     ctx: ShardCtx):
+    p_shape = serve_params_shape(cfg)
+    p_spec = param_specs(cfg, p_shape, mesh)
+    c_shape = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    c_spec = cache_specs(cfg, c_shape, mesh, data_axes=ctx.data_axes)
+    t_shape = inputs_lib.decode_token_specs(cfg, shape)
+    dsize = 1
+    for a in ctx.data_axes:
+        dsize *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    t_spec = P(ctx.data_spec) if shape.global_batch % dsize == 0 and \
+        shape.global_batch >= dsize else P(None)
+    sh = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    return (p_shape, sh(p_spec), c_shape, sh(c_spec), t_shape,
+            NamedSharding(mesh, t_spec))

@@ -1,0 +1,15 @@
+from repro.models.transformer import (
+    RunFlags,
+    ShardCtx,
+    init_cache,
+    init_params,
+    make_decode_fn,
+    make_loss_fn,
+    make_prefill_fn,
+    padded_vocab,
+)
+
+__all__ = [
+    "RunFlags", "ShardCtx", "init_cache", "init_params", "make_decode_fn",
+    "make_loss_fn", "make_prefill_fn", "padded_vocab",
+]

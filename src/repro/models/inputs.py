@@ -1,0 +1,58 @@
+"""Concrete example batches (tests/examples) and abstract input specs
+(dry-run) for every (arch x shape) cell.
+
+The modality frontends are STUBS per the assignment: audio provides
+precomputed frame embeddings, vision provides precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def make_train_batch(cfg: ModelConfig, B: int, S: int, key) -> dict:
+    ks = jax.random.split(key, 4)
+    batch = {}
+    V = cfg.vocab_size
+    if cfg.frontend == "frames":
+        batch["frames"] = jax.random.normal(ks[0], (B, S, cfg.d_model),
+                                            jnp.float32) * 0.02
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0, V, jnp.int32)
+    if cfg.frontend == "tokens+patches":
+        batch["patches"] = jax.random.normal(
+            ks[1], (B, cfg.n_media_tokens, cfg.d_model), jnp.float32) * 0.02
+    batch["labels"] = jax.random.randint(ks[2], (B, S), 0, V, jnp.int32)
+    return batch
+
+
+def make_prefill_batch(cfg: ModelConfig, B: int, S: int, key) -> dict:
+    b = make_train_batch(cfg, B, S, key)
+    b.pop("labels")
+    return b
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    batch = {}
+    if cfg.frontend == "frames":
+        batch["frames"] = sd((B, S, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = sd((B, S), jnp.int32)
+    if cfg.frontend == "tokens+patches":
+        batch["patches"] = sd((B, cfg.n_media_tokens, cfg.d_model), jnp.float32)
+    batch["labels"] = sd((B, S), jnp.int32)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = train_input_specs(cfg, shape)
+    b.pop("labels")
+    return b
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)

@@ -1,0 +1,164 @@
+"""Shared neural-net building blocks (pure functions over param pytrees).
+
+Conventions:
+  * params are plain nested dicts of jnp arrays; layer stacks carry a leading
+    (L, ...) axis and are consumed by ``lax.scan``.
+  * compute dtype is bf16 with f32 accumulation for softmax/norm/loss;
+    master params may be f32 (training) or bf16 (serving).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: Array, d_in: int, d_out: int, dtype, scale: float = 1.0,
+               shape_prefix: Tuple[int, ...] = ()) -> Array:
+    std = scale / math.sqrt(d_in)
+    return (jax.random.normal(key, shape_prefix + (d_in, d_out), jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, d: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rms_norm(x: Array, w: Array, eps: float = 1e-5) -> Array:
+    """Per-head RMS norm; x: (..., H, K), w: (H, K)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, fraction: str, theta: float = 10_000.0) -> Array:
+    """Inverse frequencies for the rotary slice of the head dim.
+
+    fraction: "full" -> rotate the whole head_dim; "half" -> rotate the first
+    half only (chatglm-style 2D RoPE); "none" handled by callers.
+    """
+    rot = head_dim if fraction == "full" else head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: Array, positions: Array, fraction: str,
+               theta: float = 10_000.0) -> Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    if fraction == "none":
+        return x
+    d = x.shape[-1]
+    rot = d if fraction == "full" else d // 2
+    inv = rope_freqs(d, fraction, theta)                       # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv       # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]                          # (B, S, 1, rot/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    if rot == d:
+        return yr.astype(x.dtype)
+    return jnp.concatenate([yr.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def sinusoidal_positions(positions: Array, d_model: int) -> Array:
+    """Fixed sin-cos position encoding; positions (B, S) -> (B, S, d_model)."""
+    half = d_model // 2
+    inv = 1.0 / (10_000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key: Array, d_model: int, d_ff: int, mlp_type: str, dtype,
+             shape_prefix: Tuple[int, ...] = ()) -> dict:
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype, shape_prefix=shape_prefix),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype, shape_prefix=shape_prefix),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype, shape_prefix=shape_prefix),
+        }
+    return {
+        "w_in": dense_init(ks[0], d_model, d_ff, dtype, shape_prefix=shape_prefix),
+        "w_out": dense_init(ks[1], d_ff, d_model, dtype, shape_prefix=shape_prefix),
+    }
+
+
+def mlp_apply(w: dict, x: Array, mlp_type: str) -> Array:
+    if mlp_type == "swiglu":
+        g = x @ w["w_gate"]
+        u = x @ w["w_up"]
+        return (jax.nn.silu(g) * u) @ w["w_down"]
+    h = jax.nn.gelu(x @ w["w_in"])
+    return h @ w["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy that never materialises one-hot (B, S, V) and stays correct
+# when V is sharded (compare+select fuses into the reduction).
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: Array, labels: Array,
+                          mask: Optional[Array] = None,
+                          z_loss: float = 0.0) -> Tuple[Array, Array]:
+    """logits (..., V) bf16/f32; labels (...) int32.  Returns (mean_loss, aux).
+
+    Label logit extracted via iota-compare fused reduction -> no (.., V)
+    one-hot tensor and no cross-shard gather when V is model-sharded.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    picked = jnp.sum(jnp.where(vocab_iota == labels[..., None], lf, 0.0), axis=-1)
+    nll = lse - picked
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll * mask) / denom
+    else:
+        loss = jnp.mean(nll)
+    return loss, lse
+
+
+def take_embedding(table: Array, ids: Array) -> Array:
+    """Embedding lookup.  For vocab-sharded tables the caller wraps this in a
+    shard_map vocab-parallel lookup (see models/transformer.py); this plain
+    version is the single-shard body."""
+    return jnp.take(table, ids, axis=0)

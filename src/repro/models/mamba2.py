@@ -1,0 +1,158 @@
+"""Mamba-2 (SSD) layer: chunked state-space dual form + O(1) decode step.
+
+Chunked SSD is numerically safe everywhere: every exponent is a difference
+cum_i - cum_j with i >= j of a cumulative sum of dA = dt * A <= 0, so all
+exp() arguments are <= 0 (contrast RWKV-6, see rwkv6.py).
+
+Projections use separate matrices per component (z, x, B, C, dt) instead of
+one fused in_proj so each output dim shards cleanly on the "model" axis
+(d_inner divisible by 16; N and H handled by replication when small).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return d_in, H, s.head_dim, s.d_state
+
+
+def mamba2_init(key: Array, cfg: ModelConfig, dtype, shape_prefix=()) -> dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in, H, P, N = dims(cfg)
+    ks = jax.random.split(key, 12)
+    pre = shape_prefix
+    f32 = jnp.float32
+    return {
+        "w_z": layers.dense_init(ks[0], d, d_in, dtype, shape_prefix=pre),
+        "w_x": layers.dense_init(ks[1], d, d_in, dtype, shape_prefix=pre),
+        "w_B": layers.dense_init(ks[2], d, N, dtype, shape_prefix=pre),
+        "w_C": layers.dense_init(ks[3], d, N, dtype, shape_prefix=pre),
+        "w_dt": layers.dense_init(ks[4], d, H, dtype, shape_prefix=pre),
+        "conv_x": (jax.random.normal(ks[5], pre + (s.conv_width, d_in), f32) * 0.1).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], pre + (s.conv_width, N), f32) * 0.1).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], pre + (s.conv_width, N), f32) * 0.1).astype(dtype),
+        "A_log": jnp.zeros(pre + (H,), f32),
+        "D": jnp.ones(pre + (H,), f32),
+        "dt_bias": jnp.full(pre + (H,), -1.0, f32),
+        "norm": jnp.ones(pre + (d_in,), f32),
+        "w_out": layers.dense_init(ks[8], d_in, d, dtype, shape_prefix=pre),
+    }
+
+
+def _causal_conv(x: Array, w: Array, tail: Array | None = None):
+    """Depthwise causal conv along time.  x (B,L,C), w (cw,C).
+    tail (B,cw-1,C) continues a previous segment.  Returns (y, new_tail)."""
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(cw))
+    return jax.nn.silu(y), xp[:, -(cw - 1):]
+
+
+def _ssd_chunk(state, xs, dt, A, B_, C_):
+    """One SSD chunk.  state (B,H,P,N); xs (B,c,H,P); dt (B,c,H) f32;
+    A (H,) f32 (negative); B_/C_ (B,c,N).  Returns (state', y (B,c,H,P))."""
+    dA = dt * A                                            # (B,c,H) <= 0
+    cum = jnp.cumsum(dA, axis=1)                           # (B,c,H)
+    # intra-chunk
+    CB = jnp.einsum("bin,bjn->bij", C_.astype(jnp.float32),
+                    B_.astype(jnp.float32))                # (B,c,c)
+    seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,c,c,H) i,j
+    c = xs.shape[1]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    M = CB[..., None] * jnp.exp(jnp.where(causal[None, :, :, None], seg, -jnp.inf))
+    M = M * dt[:, None, :, :]                              # weight by dt_j
+    y = jnp.einsum("bijh,bjhp->bihp", M, xs.astype(jnp.float32))
+    # inter-chunk (contribution of incoming state)
+    y = y + jnp.einsum("bin,bhpn->bihp", C_.astype(jnp.float32),
+                       state) * jnp.exp(cum)[..., None]
+    # state update
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)           # (B,c,H) <= 1
+    wx = xs.astype(jnp.float32) * (dt * decay_to_end)[..., None]
+    state = state * jnp.exp(cum[:, -1])[..., None, None] + \
+        jnp.einsum("bjn,bjhp->bhpn", B_.astype(jnp.float32), wx)
+    return state, y
+
+
+def mamba2_forward(w: dict, x: Array, cfg: ModelConfig,
+                   state=None, conv_tails=None):
+    """x (B,L,d) -> (y (B,L,d), (final_state, conv_tails)).  L % chunk == 0."""
+    B, L, d = x.shape
+    s = cfg.ssm
+    d_in, H, P, N = dims(cfg)
+    z = x @ w["w_z"]
+    xs = x @ w["w_x"]
+    B_ = x @ w["w_B"]
+    C_ = x @ w["w_C"]
+    dt = jax.nn.softplus((x @ w["w_dt"]).astype(jnp.float32) + w["dt_bias"])
+    t_x, t_B, t_C = conv_tails if conv_tails is not None else (None, None, None)
+    xs, t_x = _causal_conv(xs, w["conv_x"], t_x)
+    B_, t_B = _causal_conv(B_, w["conv_B"], t_B)
+    C_, t_C = _causal_conv(C_, w["conv_C"], t_C)
+    A = -jnp.exp(w["A_log"])
+
+    cl = min(s.chunk, L)
+    assert L % cl == 0, (L, cl)
+    nc = L // cl
+    xs_c = xs.reshape(B, nc, cl, H, P).transpose(1, 0, 2, 3, 4)
+    dt_c = dt.reshape(B, nc, cl, H).transpose(1, 0, 2, 3)
+    B_c = B_.reshape(B, nc, cl, N).transpose(1, 0, 2, 3)
+    C_c = C_.reshape(B, nc, cl, N).transpose(1, 0, 2, 3)
+
+    if state is None:
+        state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def body(st, inp):
+        xs_i, dt_i, B_i, C_i = inp
+        st, y = _ssd_chunk(st, xs_i, dt_i, A, B_i, C_i)
+        return st, y
+
+    state, ys = jax.lax.scan(body, state, (xs_c, dt_c, B_c, C_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, H, P)
+    y = y + w["D"][None, None, :, None] * xs.reshape(B, L, H, P).astype(jnp.float32)
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), w["norm"], cfg.norm_eps)
+    return y @ w["w_out"], (state, (t_x, t_B, t_C))
+
+
+def mamba2_decode(w: dict, x: Array, cfg: ModelConfig, state, conv_tails):
+    """x (B,1,d) single-token step. state (B,H,P,N) f32;
+    conv_tails: 3 tensors (B,cw-1,C)."""
+    B = x.shape[0]
+    d_in, H, P, N = dims(cfg)
+    z = x @ w["w_z"]
+    xs = x @ w["w_x"]
+    B_ = x @ w["w_B"]
+    C_ = x @ w["w_C"]
+    dt = jax.nn.softplus((x @ w["w_dt"]).astype(jnp.float32) + w["dt_bias"])[:, 0]
+    t_x, t_B, t_C = conv_tails
+    xs, t_x = _causal_conv(xs, w["conv_x"], t_x)
+    B_, t_B = _causal_conv(B_, w["conv_B"], t_B)
+    C_, t_C = _causal_conv(C_, w["conv_C"], t_C)
+    A = -jnp.exp(w["A_log"])
+
+    xs1 = xs[:, 0].reshape(B, H, P).astype(jnp.float32)
+    B1 = B_[:, 0].astype(jnp.float32)                       # (B,N)
+    C1 = C_[:, 0].astype(jnp.float32)
+    dA = jnp.exp(dt * A)                                    # (B,H)
+    state = state * dA[..., None, None] + \
+        jnp.einsum("bn,bhp->bhpn", B1, xs1 * dt[..., None])
+    y = jnp.einsum("bn,bhpn->bhp", C1, state)
+    y = y + w["D"][None, :, None] * xs1
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), w["norm"], cfg.norm_eps)
+    return y @ w["w_out"], (state, (t_x, t_B, t_C))

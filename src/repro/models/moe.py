@@ -1,0 +1,106 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Why sort-based: the one-hot-matmul (GShard) dispatch costs O(T * E * C * d)
+FLOPs which poisons the useful-compute ratio; sorting + scatter keeps the
+dispatch at gather/scatter cost so HLO FLOPs stay ~= active-expert FLOPs.
+
+Baseline sharding: tokens on "data", experts on "model" (expert parallelism);
+GSPMD inserts the cross-axis traffic.  The hillclimbed explicit all-to-all EP
+path lives in repro/sharding/ep.py (shard_map).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+def moe_init(key: Array, cfg: ModelConfig, n_layers: int, dtype) -> dict:
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    pre = (n_layers, m.n_experts)
+    if cfg.mlp_type == "swiglu":
+        w = {
+            "w_gate": layers.dense_init(ks[0], cfg.d_model, m.expert_d_ff, dtype, shape_prefix=pre),
+            "w_up": layers.dense_init(ks[1], cfg.d_model, m.expert_d_ff, dtype, shape_prefix=pre),
+            "w_down": layers.dense_init(ks[2], m.expert_d_ff, cfg.d_model, dtype, shape_prefix=pre),
+        }
+    else:
+        w = {
+            "w_in": layers.dense_init(ks[0], cfg.d_model, m.expert_d_ff, dtype, shape_prefix=pre),
+            "w_out": layers.dense_init(ks[1], m.expert_d_ff, cfg.d_model, dtype, shape_prefix=pre),
+        }
+    w["router"] = layers.dense_init(ks[3], cfg.d_model, m.n_experts, jnp.float32,
+                                    scale=0.1, shape_prefix=(n_layers,))
+    return w
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def route(router_w: Array, x: Array, top_k: int) -> Tuple[Array, Array, Array]:
+    """x (T, d) -> (topk idx (T,k), combine weights (T,k) f32, aux loss)."""
+    logits = x.astype(jnp.float32) @ router_w                    # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss.
+    E = logits.shape[-1]
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return idx, w, aux
+
+
+def moe_apply(w: dict, x: Array, cfg: ModelConfig, layer_idx=None) -> Tuple[Array, Array]:
+    """x (T, d) -> (out (T, d), aux loss).  Sort-based capacity dispatch."""
+    m = cfg.moe
+    T, d = x.shape
+    C = capacity(cfg, T)
+    E = m.n_experts
+    k = m.top_k
+
+    router_w = w["router"] if layer_idx is None else w["router"]
+    idx, cw, aux = route(router_w, x, k)                         # (T,k)
+
+    e_flat = idx.reshape(-1)                                     # (T*k,)
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)       # (T*k,)
+    w_flat = cw.reshape(-1)
+
+    order = jnp.argsort(e_flat)                                  # stable
+    se, st, sw = e_flat[order], t_flat[order], w_flat[order]
+    # position of each routed token within its expert segment
+    counts = jnp.bincount(e_flat, length=E)                      # (E,)
+    seg_start = jnp.cumsum(counts) - counts                      # exclusive
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - seg_start[se]
+    keep = pos_in_e < C
+    dest = jnp.where(keep, se * C + pos_in_e, E * C)             # OOB -> drop
+
+    xt = jnp.take(x, st, axis=0)                                 # (T*k, d)
+    buf = jnp.zeros((E * C, d), x.dtype).at[dest].set(
+        xt * keep[:, None].astype(x.dtype), mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, w["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, w["w_up"])
+        h = jax.nn.silu(g) * u
+        y = jnp.einsum("ecf,efd->ecd", h, w["w_down"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, w["w_in"]))
+        y = jnp.einsum("ecf,efd->ecd", h, w["w_out"])
+    y = y.reshape(E * C, d)
+
+    yt = jnp.take(y, jnp.where(keep, dest, 0), axis=0)
+    yt = yt * (sw * keep).astype(y.dtype)[:, None]
+    out = jnp.zeros((T, d), y.dtype).at[st].add(yt)
+    return out, aux

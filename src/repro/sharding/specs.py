@@ -1,0 +1,243 @@
+"""Rule-based PartitionSpec assignment.
+
+Specs are derived from parameter *paths* + shapes with divisibility checks,
+so one rule set covers all 10 architectures.  Baseline layout (Megatron
+style):
+
+  * embeddings / lm_head: vocab on "model"
+  * attn: q heads on "model"; k/v heads on "model" only when KH divides it
+  * mlp / experts: hidden (or expert) dim on "model"
+  * batch on ("pod","data"); decode caches: batch on "data", time on "model"
+    (context-parallel decode); SSM states: heads on "model", state on "data"
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def _div(n: int, m: int) -> bool:
+    return n % m == 0
+
+
+def _mesh_sizes(mesh, data_axes, model_axis):
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = 1
+    for a in data_axes:
+        dsize *= ax[a]
+    return dsize, ax[model_axis]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _param_rule(cfg: ModelConfig, path: str, shape: Tuple[int, ...],
+                msize: int, model: str) -> P:
+    nd = len(shape)
+    none = (None,) * nd
+
+    def shard(dim: int) -> P:
+        dim = dim % nd
+        if not _div(shape[dim], msize):
+            return P(*none)
+        spec = [None] * nd
+        spec[dim] = model
+        return P(*spec)
+
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf == "embed":
+        return shard(0)
+    if leaf == "lm_head":
+        return shard(-1)
+    # attention
+    if leaf == "wq":
+        return shard(-1)
+    if leaf in ("wk", "wv"):
+        kh = cfg.n_kv_heads
+        return shard(-1) if _div(kh, msize) else P(*none)
+    if leaf == "wo":
+        return shard(-2)
+    # dense mlp / experts
+    if "moe" in path and leaf in ("w_gate", "w_up", "w_down", "w_in", "w_out"):
+        # experts dim is axis 1 of (L, E, ...)
+        if nd >= 2 and _div(shape[1], msize):
+            spec = [None] * nd
+            spec[1] = model
+            return P(*spec)
+        return P(*none)
+    if leaf in ("w_gate", "w_up", "w_in"):
+        return shard(-1)
+    if leaf in ("w_down",):
+        return shard(-2)
+    if leaf == "w_out" and "mamba" not in path and "blocks" in path:
+        return shard(-2)
+    # mamba2
+    if "mamba" in path:
+        if leaf in ("w_z", "w_x", "w_dt"):
+            return shard(-1)
+        if leaf == "w_out":
+            return shard(-2)
+        if leaf == "conv_x":
+            return shard(-1)
+        if leaf in ("A_log", "D", "dt_bias"):
+            return shard(-1)
+        if leaf == "norm":
+            return shard(-1)
+    # rwkv6
+    if "tmix" in path:
+        if leaf in ("w_r", "w_k", "w_v", "w_g", "decay_w"):
+            return shard(-1)
+        if leaf == "w_o":
+            return shard(-2)
+        if leaf in ("u", "ln"):
+            return shard(-2)          # (H, K) -> heads
+    if "cmix" in path:
+        if leaf == "w_k":
+            return shard(-1)
+        if leaf == "w_v":
+            return shard(-2)
+    return P(*none)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh,
+                model_axis: str = "model") -> Any:
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    msize = ax[model_axis]
+
+    def rule(path, leaf):
+        return _param_rule(cfg, _path_str(path), leaf.shape, msize, model_axis)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batches
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, batch_shape: Any, mesh,
+                data_axes: Tuple[str, ...] = ("data",),
+                model_axis: str = "model") -> Any:
+    dsize, _ = _mesh_sizes(mesh, data_axes, model_axis)
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        if nd >= 1 and _div(leaf.shape[0], dsize) and leaf.shape[0] > 1:
+            return P(*((dspec,) + (None,) * (nd - 1)))
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh,
+                data_axes: Tuple[str, ...] = ("data",),
+                model_axis: str = "model") -> Any:
+    dsize, msize = _mesh_sizes(mesh, data_axes, model_axis)
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        leafname = p.rsplit("/", 1)[-1]
+        sh = leaf.shape
+        nd = len(sh)
+        spec = [None] * nd
+
+        def put(dim, axis, size):
+            if _div(sh[dim], size) and sh[dim] >= size:
+                spec[dim] = axis
+                return True
+            return False
+
+        if leafname in ("k", "v"):                 # (L,B,S,KH,hd)
+            put(1, dspec, dsize)
+            put(2, model_axis, msize)
+        elif leafname in ("cross_k", "cross_v"):   # (nc,B,M,KH,hd)
+            put(1, dspec, dsize)
+            put(2, model_axis, msize)
+        elif leafname == "kv_pos":                 # (B,S)
+            put(0, dspec, dsize)
+            put(1, model_axis, msize)
+        elif leafname in ("win_k", "win_v"):       # (ns,B,W,KH,hd)
+            put(1, dspec, dsize)
+            put(2, model_axis, msize)
+        elif leafname == "win_pos":                # (ns,B,W)
+            put(1, dspec, dsize)
+            put(2, model_axis, msize)
+        elif leafname == "mamba_state":            # (ns,per,B,H,P,N)
+            if not put(2, dspec, dsize):
+                put(4, dspec, dsize)
+            put(3, model_axis, msize)
+        elif "conv_tails" in p:                    # (ns,per,B,cw-1,C)
+            put(2, dspec, dsize)
+            put(4, model_axis, msize)
+        elif leafname == "wkv_state":              # (L,B,H,K,V)
+            if not put(1, dspec, dsize):
+                put(3, dspec, dsize)
+            put(2, model_axis, msize)
+        elif leafname in ("tmix_shift", "cmix_shift"):   # (L,B,1,d)
+            put(1, dspec, dsize)
+            put(3, model_axis, msize)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def to_shardings(specs: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# ZeRO sharding: additionally shard a replicated dim over the data axes.
+# Level 1: optimizer moments (+grad accumulators); level 3: master params too
+# (GSPMD then inserts the FSDP all-gathers in the forward pass).
+# ---------------------------------------------------------------------------
+
+
+def zero_spec(spec: P, shape: Tuple[int, ...], mesh,
+              data_axes: Tuple[str, ...]) -> P:
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dsize = 1
+    for a in data_axes:
+        dsize *= ax[a]
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    cur = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    # choose the largest unsharded dim divisible by the data-axis size
+    best, best_dim = -1, None
+    for i, (s, d) in enumerate(zip(shape, cur)):
+        if d is None and s % dsize == 0 and s >= dsize and s > best:
+            best, best_dim = s, i
+    if best_dim is None:
+        return spec
+    out = list(cur)
+    out[best_dim] = dspec
+    return P(*out)
+
+
+def zero_specs(spec_tree: Any, shape_tree: Any, mesh,
+               data_axes: Tuple[str, ...]) -> Any:
+    return jax.tree.map(
+        lambda s, sh: zero_spec(s, sh.shape, mesh, data_axes),
+        spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,7 @@
+import sys
+from pathlib import Path
+
+# src-layout import without installation; tests must see exactly the real
+# device count (dryrun.py alone forces 512 host devices).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))

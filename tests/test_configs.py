@@ -1,0 +1,58 @@
+import pytest
+
+from repro.configs import (ARCHS, SHAPES, applicable_shapes, count_params,
+                           get_config, non_embedding_params, smoke)
+
+EXPECTED_PARAM_RANGE = {
+    "mistral-nemo-12b": (11e9, 13.5e9),
+    "granite-20b": (19e9, 22e9),
+    "chatglm3-6b": (5.5e9, 7e9),
+    "llama3.2-1b": (1.0e9, 1.5e9),
+    "hubert-xlarge": (0.8e9, 1.1e9),
+    "zamba2-2.7b": (2.2e9, 3.0e9),
+    "rwkv6-7b": (6.0e9, 8.0e9),
+    "llama-3.2-vision-11b": (9.5e9, 11.5e9),
+    "moonshot-v1-16b-a3b": (25e9, 30e9),   # assignment config: 48L 64e
+    "phi3.5-moe-42b-a6.6b": (40e9, 44e9),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_registry_and_counts(arch):
+    cfg = get_config(arch)
+    assert cfg.arch == arch
+    n = count_params(cfg)
+    lo, hi = EXPECTED_PARAM_RANGE[arch]
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+    assert non_embedding_params(cfg) < n
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduction_preserves_structure(arch):
+    cfg = get_config(arch)
+    s = smoke(cfg)
+    assert s.family == cfg.family
+    assert (s.moe is None) == (cfg.moe is None)
+    assert (s.ssm is None) == (cfg.ssm is None)
+    assert (s.rwkv is None) == (cfg.rwkv is None)
+    assert bool(s.attn_period) == bool(cfg.attn_period)
+    assert bool(s.cross_attn_period) == bool(cfg.cross_attn_period)
+    assert s.d_model <= 128 and s.vocab_size <= 1024
+
+
+def test_applicable_shapes_rules():
+    assert applicable_shapes(get_config("hubert-xlarge"))["decode_32k"].startswith("SKIP")
+    assert applicable_shapes(get_config("hubert-xlarge"))["long_500k"].startswith("SKIP")
+    assert applicable_shapes(get_config("mistral-nemo-12b"))["long_500k"].startswith("SKIP")
+    assert applicable_shapes(get_config("zamba2-2.7b"))["long_500k"] == "OK"
+    assert applicable_shapes(get_config("rwkv6-7b"))["long_500k"] == "OK"
+    total_ok = sum(1 for a in ARCHS for v in applicable_shapes(get_config(a)).values()
+                   if v == "OK")
+    assert total_ok == 31   # the dry-run matrix size (x2 meshes = 62)
+
+
+def test_moe_active_params():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    full = count_params(cfg)
+    active = count_params(cfg, active_only=True)
+    assert active < full / 4    # 16 experts top-2

@@ -1,0 +1,60 @@
+"""Pallas flash-attention kernel vs ref.py oracle — shape/dtype sweeps in
+interpret mode (deliverable c: per-kernel allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref as R
+from repro.kernels.flash_attention.ops import flash_attention
+
+KEY = jax.random.PRNGKey(3)
+
+SWEEP = [
+    # B, H, KH, S, D, causal, window, dtype
+    (2, 4, 2, 128, 16, True, 0, jnp.float32),
+    (1, 4, 4, 64, 32, False, 0, jnp.float32),
+    (2, 8, 2, 128, 16, True, 48, jnp.float32),
+    (2, 4, 1, 256, 64, True, 0, jnp.bfloat16),
+    (1, 2, 2, 64, 128, True, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,KH,S,D,causal,window,dt", SWEEP)
+def test_fwd_matches_ref(B, H, KH, S, D, causal, window, dt):
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, H, S, D), dt)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, KH, S, D), dt)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, KH, S, D), dt)
+    ref = R.attention_ref(q, k, v, causal=causal, window=window)
+    out, lse = K.flash_fwd(q, k, v, causal=causal, window=window,
+                           bq=32, bk=32)
+    err = float(jnp.max(jnp.abs(ref.astype(jnp.float32) -
+                                out.astype(jnp.float32))))
+    tol = 2e-5 if dt == jnp.float32 else 3e-2
+    assert err < tol, err
+    assert np.isfinite(np.asarray(lse)).all()
+
+
+@pytest.mark.parametrize("B,H,KH,S,D,causal,window,dt", SWEEP[:3])
+def test_bwd_matches_ref(B, H, KH, S, D, causal, window, dt):
+    qm = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, D), dt)
+    km = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KH, D), dt)
+    vm = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, KH, D), dt)
+
+    def f_kernel(q, k, v):
+        return (flash_attention(q, k, v, causal=causal, window=window,
+                                bq=32, bk=32).astype(jnp.float32) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (R.attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal,
+            window=window).astype(jnp.float32) ** 2).sum()
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(qm, km, vm)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(qm, km, vm)
+    for a, b in zip(gk, gr):
+        err = float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                    b.astype(jnp.float32))))
+        assert err < 5e-4, err

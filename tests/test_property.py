@@ -1,0 +1,190 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.congestion import CongestionConfig, simulate
+from repro.core.registers import RO, W1C, RegisterFile
+from repro.core.transactions import Transaction
+from repro.models.layers import apply_rope, softmax_cross_entropy
+from repro.optim.compress import BLOCK, compress_decompress, ef_compress
+
+# ---------------------------------------------------------------- congestion
+
+
+@st.composite
+def tx_streams(draw):
+    n = draw(st.integers(1, 40))
+    engines = draw(st.lists(st.sampled_from(["a", "b", "c"]), min_size=1,
+                            max_size=3, unique=True))
+    return [Transaction(0.0, draw(st.sampled_from(engines)), "read", 0,
+                        draw(st.integers(1, 1 << 16))) for _ in range(n)]
+
+
+@given(tx_streams(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_congestion_conservation_and_determinism(txs, seed):
+    cfg = CongestionConfig(dos_prob=0.3, seed=seed)
+    import copy
+    r1 = simulate(copy.deepcopy(txs), cfg)
+    r2 = simulate(copy.deepcopy(txs), cfg)
+    # determinism under the seed
+    assert r1.makespan == r2.makespan
+    assert r1.per_engine_stall == r2.per_engine_stall
+    # every transaction completes, after its issue time
+    assert len(r1.timeline) == len(txs)
+    assert all(t.complete > t.time for t in r1.timeline)
+    # makespan is at least serial transfer time of all bytes
+    serial = sum(t.nbytes for t in txs) / cfg.link_bytes_per_cycle
+    assert r1.makespan >= serial
+    # stalls are non-negative
+    assert all(s >= 0 for s in r1.per_engine_stall.values())
+
+
+# ----------------------------------------------------------------- registers
+
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(0, 5),
+                          st.integers(0, 2 ** 32 - 1)), max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_register_protocol_invariants(ops):
+    rf = RegisterFile()
+    rf.define("rw0", 0x0)
+    rf.define("ro0", 0x4, access=RO, reset=0x1234)
+    rf.define("w1c", 0x8, access=W1C, reset=0xFF)
+    addrs = [0x0, 0x4, 0x8, 0xC, 0x10, 0x14]      # last three unmapped
+    for is_write, ai, val in ops:
+        if is_write:
+            rf.fb_write_32(addrs[ai], val)
+        else:
+            rf.fb_read_32(addrs[ai])
+    # RO register never changes
+    assert rf.hw_get("ro0") == 0x1234
+    # W1C only ever clears bits of its reset value
+    assert rf.hw_get("w1c") & ~0xFF == 0
+    # every unmapped access was flagged
+    unmapped = sum(1 for w, ai, _ in ops if ai >= 3)
+    assert len(rf.log.violations) >= unmapped and (
+        unmapped == 0 or rf.log.violations)
+    # transaction log is complete
+    assert len(rf.log.txs) == len(ops)
+
+
+# --------------------------------------------------------------- compression
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_int8_compression_error_bound(seed, nblocks):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(nblocks * BLOCK,)) *
+                    rng.uniform(1e-6, 10), jnp.float32)
+    cq = compress_decompress(g)
+    # blockwise error bound: |x - q(x)| <= scale/2 = max|block| / 254
+    # (relative slack: half-to-even hits the bound exactly and the f32
+    # dequant multiply can land an ulp above it — found by hypothesis)
+    blocks = np.asarray(g).reshape(-1, BLOCK)
+    bound = np.abs(blocks).max(axis=1, keepdims=True) / 127.0
+    err = np.abs(np.asarray(cq).reshape(-1, BLOCK) - blocks)
+    assert (err <= bound * 0.5 * (1 + 1e-5) + 1e-9).all()
+
+
+def test_error_feedback_preserves_sum():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(BLOCK * 2,)), jnp.float32)}
+    err = {"w": jnp.zeros((BLOCK * 2,), jnp.float32)}
+    total_sent = jnp.zeros_like(g["w"])
+    total_true = jnp.zeros_like(g["w"])
+    for _ in range(50):
+        sent, err = ef_compress(g, err)
+        total_sent = total_sent + sent["w"]
+        total_true = total_true + g["w"]
+    # EF: cumulative compressed stream tracks the true sum within one step's
+    # quantization error (residual is bounded, not accumulating)
+    resid = float(jnp.max(jnp.abs(total_sent - total_true)))
+    one_step_bound = float(jnp.max(jnp.abs(g["w"]))) / 127.0 * 2
+    assert resid <= one_step_bound * 2
+
+
+# ----------------------------------------------------------------- numerics
+
+
+@given(st.integers(0, 1000), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_rope_is_relative(offset, seed):
+    """q_i . k_j after RoPE depends only on i - j (position-shift invariant),
+    which is what makes the serving engine's left-padding exact."""
+    key = jax.random.PRNGKey(seed)
+    D, S = 16, 8
+    q = jax.random.normal(jax.random.fold_in(key, 0), (1, S, 1, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, S, 1, D))
+    pos = jnp.arange(S)[None, :]
+    s0 = jnp.einsum("bqhd,bkhd->bqk", apply_rope(q, pos, "full"),
+                    apply_rope(k, pos, "full"))
+    s1 = jnp.einsum("bqhd,bkhd->bqk", apply_rope(q, pos + offset, "full"),
+                    apply_rope(k, pos + offset, "full"))
+    assert float(jnp.max(jnp.abs(s0 - s1))) < 1e-3
+
+
+@given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_cross_entropy_matches_onehot(V, seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(3, 5, V)) * 5, jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, size=(3, 5)), jnp.int32)
+    loss, _ = softmax_cross_entropy(logits, labels)
+    onehot = jax.nn.one_hot(labels, V)
+    ref = -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+    assert abs(float(loss) - float(ref)) < 1e-4
+
+
+# -------------------------------------------------------------- hlo profiler
+
+
+def test_hlo_profiler_scan_trip_correction():
+    """A 12-step scanned matmul must report 12x the flops of its body."""
+    from repro.core.hlo_profiler import profile_hlo
+
+    def scanned(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y.sum()
+
+    def direct(x, w):
+        return jnp.tanh(x @ w).sum()
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ps = profile_hlo(jax.jit(scanned).lower(x, w).compile().as_text(), 1)
+    pd = profile_hlo(jax.jit(direct).lower(x, w).compile().as_text(), 1)
+    assert abs(ps.flops - 12 * pd.flops) / (12 * pd.flops) < 0.05
+
+
+def test_hlo_profiler_collective_bytes_fixture():
+    """Ring-model byte accounting on a hand-written post-SPMD HLO module."""
+    from repro.core.hlo_profiler import profile_hlo
+    hlo = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(%p0), replica_groups=[2,4]<=[8], to_apply=%add
+  %ag = f32[512,256]{1,0} all-gather(%ar), replica_groups=[2,4]<=[8], dimensions={0}
+  %sl = f32[128,256]{1,0} slice(%ag), slice={[0:128], [0:256]}
+  ROOT %cp = f32[128,256]{1,0} collective-permute(%sl), source_target_pairs={{0,1}}
+}
+"""
+    p = profile_hlo(hlo, 8)
+    n = 128 * 256 * 4
+    expect = 2 * n * 3 // 4 + (4 * n) * 3 // 4 + n
+    assert abs(p.collective_bytes - expect) < 1e-6
+    assert {c.kind for c in p.collectives} == {
+        "all-reduce", "all-gather", "collective-permute"}

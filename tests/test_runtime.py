@@ -1,0 +1,87 @@
+"""Trainer fault tolerance, checkpoint/restart, straggler detection,
+elastic resharding restore."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, smoke
+from repro.models.transformer import RunFlags
+from repro.runtime import FailureInjector, StragglerMonitor, Trainer, \
+    TrainerConfig
+
+FLAGS = RunFlags(attn_impl="chunked", q_chunk=16, kv_chunk=16)
+
+
+def _trainer(tmp, steps=10, injector=None, ckpt_every=4):
+    cfg = smoke(get_config("llama3.2-1b"))
+    tcfg = TrainerConfig(seq_len=64, global_batch=4, steps=steps,
+                         ckpt_every=ckpt_every, ckpt_dir=str(tmp))
+    return Trainer(cfg, tcfg, FLAGS, failure_injector=injector)
+
+
+def test_failure_recovery_and_completion(tmp_path):
+    inj = FailureInjector(fail_steps=[6])
+    tr = _trainer(tmp_path / "c1", steps=10, injector=inj)
+    state, step = tr.train()
+    assert step == 10
+    assert tr.restarts == 1
+    assert inj.injected == [6]
+    assert tr.csr.hw_get("STATUS") == 2
+
+
+def test_resume_from_checkpoint(tmp_path):
+    tr = _trainer(tmp_path / "c2", steps=8)
+    tr.train()
+    tr2 = _trainer(tmp_path / "c2", steps=12)
+    state, step = tr2.train(resume=True)
+    assert step == 12
+    assert tr2.metrics_log[0]["step"] == 8     # continued, not restarted
+
+
+def test_too_many_failures_raises(tmp_path):
+    inj = FailureInjector(fail_steps=[1, 2, 3, 4, 5])
+    tr = _trainer(tmp_path / "c3", steps=8, injector=inj, ckpt_every=100)
+    tr.tcfg = TrainerConfig(seq_len=64, global_batch=4, steps=8,
+                            ckpt_every=100, ckpt_dir=str(tmp_path / "c3"),
+                            max_restarts=2)
+    with pytest.raises(Exception):
+        tr.train()
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0, warmup=2)
+    for i in range(6):
+        assert mon.observe(i, 0.1) is None
+    ev = mon.observe(6, 0.5)
+    assert ev is not None and ev.ratio > 2.0
+    # outlier not folded into ewma
+    assert abs(mon.ewma - 0.1) < 1e-6
+
+
+def test_checkpoint_roundtrip_and_reshard(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck", keep=2, async_save=False)
+    state = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4),
+             "step": jnp.asarray(7)}
+    mgr.save(3, state)
+    mgr.save(5, state)
+    mgr.save(9, state)
+    assert mgr.list_steps() == [5, 9]          # keep=2 gc
+    like = jax.eval_shape(lambda: state)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = {"w": NamedSharding(mesh, P("data", None)),
+          "step": NamedSharding(mesh, P())}
+    restored = mgr.restore(9, like, shardings=sh)   # reshard on restore
+    assert np.array_equal(np.asarray(restored["w"]), np.asarray(state["w"]))
+    assert restored["w"].sharding == sh["w"]
+
+
+def test_atomicity_no_tmp_dirs(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck2", async_save=False)
+    mgr.save(1, {"x": jnp.ones((2,))})
+    assert not list((tmp_path / "ck2").glob("*.tmp"))
