@@ -7,6 +7,11 @@ equivalence check — on a matmul workload sized so the active tile equals
 the paper's PE-array size.  FPGA side: the paper's Vivado synth+P&R times
 (`modeled-from-paper`, DESIGN.md §9).  The paper's claim is up to 50x at
 the largest design that fits the ZCU102 (2500 PEs).
+
+Second measurement (the batched lane): a >=8-cell (op, backend, config)
+sweep through the CoVerifySession scheduler vs. the sequential per-op
+coverify loop — the scheduler shares compiled backends across cells and
+overlaps independent cells on a thread pool (core/scheduler.py).
 """
 from __future__ import annotations
 
@@ -15,8 +20,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CongestionConfig, coverify
-from repro.kernels.systolic_matmul import ops as mm_ops, ref as mm_ref
+from repro.core import CongestionConfig, CoVerifySession, coverify
+from repro.kernels.systolic_matmul import ops as mm_ops, ref as mm_ref, \
+    sweep as sweep_mod
 from repro.kernels.systolic_matmul.kernel import matmul as mm_kernel
 
 # (PE count, matrix size) — tile = sqrt(PE) x sqrt(PE); matrix 16 tiles wide
@@ -75,5 +81,73 @@ def run() -> list[str]:
     return rows
 
 
+# ------------------------------------------------- batched sweep (Fig. 5+)
+SWEEP_SIZES = (64, 96, 128, 160)
+SWEEP_TILE = 32
+
+# The sequential per-op loop calls matmul_backends() fresh every iteration
+# (exactly like one_iteration above), discarding the jitted trace/
+# executable cache across cells; the CoVerifySession registers one table
+# for the whole sweep, so each backend is traced and compiled once per
+# shape for the entire session — the scheduler's compiled-backend cache.
+_sweep_firmware = sweep_mod.matmul_firmware
+
+
+def _make_mm_backends():
+    return sweep_mod.matmul_backends(tile=SWEEP_TILE)
+
+
+def sweep_comparison(sizes=SWEEP_SIZES,
+                     backends=("oracle", "interpret", "compiled"),
+                     max_workers: int = 4) -> tuple[float, float, bool]:
+    """(sequential_s, batched_s, both_passed) on a len(sizes)*3-cell sweep.
+
+    Sequential lane: one coverify() call per config, fresh backend lambdas
+    each time — the pre-scheduler flow.  Batched lane: one CoVerifySession
+    with shared backends and a thread pool.  Both lanes are measured after
+    one warmup pass over every shape (steady-state debug iterations: the
+    sweep is re-run after each firmware edit with XLA caches warm).
+    """
+    cong = CongestionConfig(dos_prob=0.02, seed=11)
+
+    def run_sequential() -> tuple[float, bool]:
+        t0 = time.perf_counter()
+        ok = True
+        for size in sizes:
+            def fw(fb, backend, size=size):
+                _sweep_firmware(fb, "mm", backend, size=size)
+            res = coverify(fw, {"mm": _make_mm_backends()},
+                           backends=backends, tol=1e-3, congestion=cong)
+            ok &= res.passed
+        return time.perf_counter() - t0, ok
+
+    # ONE session for all batched sweep re-runs — its registered backend
+    # table (jitted callables) persists, so re-sweeps after a firmware
+    # edit hit the trace/executable cache instead of recompiling.
+    sess = CoVerifySession(_sweep_firmware, congestion=cong)
+    sess.register_op("mm", **_make_mm_backends())
+    sess.add_sweep("mm", backends, [{"size": s} for s in sizes])
+
+    def run_batched() -> tuple[float, bool]:
+        t0 = time.perf_counter()
+        report = sess.run(max_workers=max_workers)
+        return time.perf_counter() - t0, report.passed
+
+    run_sequential()                      # warmup: populate XLA shape caches
+    seq_s, seq_ok = run_sequential()
+    run_batched()                         # warmup: populate session caches
+    bat_s, bat_ok = run_batched()
+    return seq_s, bat_s, seq_ok and bat_ok
+
+
+def run_sweep() -> list[str]:
+    ncells = len(SWEEP_SIZES) * 3
+    seq_s, bat_s, ok = sweep_comparison()
+    return [f"case,cells,sequential_s,batched_s,speedup,passed",
+            f"fig5_sweep,{ncells},{seq_s:.2f},{bat_s:.2f},"
+            f"{seq_s/bat_s:.2f}x,{ok}"]
+
+
 if __name__ == "__main__":
     print("\n".join(run()))
+    print("\n".join(run_sweep()))

@@ -10,12 +10,13 @@ paper's CGRA: weights / input / output.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bridge import FireBridge
+from repro.core.congestion import CongestionConfig
 from repro.kernels.systolic_matmul import ops as mm_ops, ref as mm_ref
 
 
@@ -78,10 +79,15 @@ def _round_up(n: int, m: int) -> int:
 
 
 def run_cnn(specs: List[ConvSpec], backend: str = "oracle",
-            seed: int = 0, tile: int = 64) -> FireBridge:
+            seed: int = 0, tile: int = 64,
+            congestion: Optional[CongestionConfig] = None) -> FireBridge:
     """Run one inference through the bridge; returns the bridge with the
-    full transaction log (3 DMA engines + CSRs)."""
-    fb = FireBridge("cgra")
+    full transaction log (3 DMA engines + CSRs).
+
+    With `congestion` set the three DMA engines contend on the online
+    shared link *while the layers run* (paper §IV-C) — stall statistics
+    come from fb.congestion_stats(), no post-hoc replay."""
+    fb = FireBridge("cgra", congestion=congestion)
     fb.csr.define("CTRL", 0x0)
     fb.csr.define("STATUS", 0x4, access="ro")
     fb.csr.define("LAYER", 0x8)
@@ -112,18 +118,18 @@ def run_cnn(specs: List[ConvSpec], backend: str = "oracle",
 
         fb.csr.fb_write_32(0x8, layer)
         fb.csr.fb_write_32(0x0, 1)                       # start layer
-        # DMA bursts: weights prefetch, input read, output write
+        out = fb._ops["matmul"][backend](a, w, tile)
+        out = np.maximum(out, 0.0)                       # firmware ReLU
+        # DMA bursts: weights prefetch, input read, output write — one
+        # batch per layer, so the three engines contend on the shared link
+        # (and priorities arbitrate) when congestion is enabled (§IV-C).
         fb.mem.log_burst_list(
             [("dma_weights", "read", fb.mem.buffers[wname].addr + off,
               tile * tile * 4)
-             for off in range(0, w.nbytes, tile * tile * 4)])
-        fb.mem.log_burst_list(
+             for off in range(0, w.nbytes, tile * tile * 4)] +
             [("dma_input", "read", fb.mem.buffers[ping].addr + off,
               tile * tile * 4)
-             for off in range(0, a.nbytes, tile * tile * 4)])
-        out = fb._ops["matmul"][backend](a, w, tile)
-        out = np.maximum(out, 0.0)                       # firmware ReLU
-        fb.mem.log_burst_list(
+             for off in range(0, a.nbytes, tile * tile * 4)] +
             [("dma_output", "write", fb.mem.buffers[pong].addr + off,
               tile * tile * 4)
              for off in range(0, out[:cols.shape[0], :c.cout].nbytes,

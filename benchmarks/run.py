@@ -36,6 +36,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     _run("fig5_debug_iteration", bench_debug_iteration.run)
+    _run("fig5_batched_sweep", bench_debug_iteration.run_sweep)
     _run("fig7_hls4ml_scaling", bench_hls4ml_scaling.run)
     _run("fig8_bandwidth_profile", bench_bandwidth_profile.run)
     _run("fig9_access_patterns", bench_access_patterns.run)

@@ -3,21 +3,29 @@
   registers     — fb_read_32/fb_write_32 CSR protocol (paper §IV-A)
   transactions  — burst log + bandwidth/heatmap profiling (Figs. 8, 9)
   bridge        — DDR memory bridge + multi-backend accelerator launch (§IV)
-  congestion    — seeded interconnect contention / DoS emulator (§IV-C)
+  congestion    — seeded interconnect contention / DoS emulator, online
+                  LinkModel + offline replay (§IV-C)
   equivalence   — oracle ≡ interpret ≡ compiled checking w/ localization
   coverify      — one-call co-verification driver (debug-iteration unit)
+  scheduler     — batched multi-backend sweep scheduler (Fig. 5 at scale)
   hlo_profiler  — compiled-HLO transaction extraction + roofline terms
 """
 from repro.core.bridge import Buffer, FireBridge, MemoryBridge
-from repro.core.congestion import CongestionConfig, CongestionResult, simulate
+from repro.core.congestion import (CongestionConfig, CongestionResult,
+                                   LinkModel, simulate)
 from repro.core.coverify import CoverifyResult, coverify
-from repro.core.equivalence import EquivalenceReport, check_equivalence
+from repro.core.equivalence import (EquivalenceReport, check_equivalence,
+                                    compare_outputs)
 from repro.core.registers import DOORBELL, RO, RW, W1C, RegisterFile
+from repro.core.scheduler import (CellResult, CoVerifySession, SweepCell,
+                                  SweepReport, run_sequential)
 from repro.core.transactions import Transaction, TransactionLog
 
 __all__ = [
     "Buffer", "FireBridge", "MemoryBridge", "CongestionConfig",
-    "CongestionResult", "simulate", "CoverifyResult", "coverify",
-    "EquivalenceReport", "check_equivalence", "RegisterFile", "RO", "RW",
-    "W1C", "DOORBELL", "Transaction", "TransactionLog",
+    "CongestionResult", "LinkModel", "simulate", "CoverifyResult",
+    "coverify", "EquivalenceReport", "check_equivalence", "compare_outputs",
+    "RegisterFile", "RO", "RW", "W1C", "DOORBELL", "CellResult",
+    "CoVerifySession", "SweepCell", "SweepReport", "run_sequential",
+    "Transaction", "TransactionLog",
 ]

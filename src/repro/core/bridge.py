@@ -7,6 +7,14 @@ the compiled XLA executable ("deployment") — accesses the same buffers
 through the bridge, which logs every burst as a Transaction.  The SAME
 firmware function runs unmodified against every backend; that is the
 paper's equivalence guarantee, checked by core/equivalence.py.
+
+Congestion is *online* (paper §IV-C): construct the bridge with a
+``CongestionConfig`` and every device access and kernel burst list is
+arbitrated through a shared ``LinkModel`` as the firmware runs, so
+``bridge.time`` advances by modeled transfer latency and per-engine stall
+statistics (Fig. 8) accumulate during ``launch()`` — no post-hoc replay
+step.  Without a config the original fast path is preserved (one logical
+cycle per access).
 """
 from __future__ import annotations
 
@@ -16,12 +24,15 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.congestion import (CongestionConfig, CongestionResult,
+                                   LinkModel)
 from repro.core.registers import RegisterFile
 from repro.core.transactions import Transaction, TransactionLog
 
 
 @dataclasses.dataclass
 class Buffer:
+    """One named DDR allocation (paper Fig. 3 "shared memory region")."""
     name: str
     addr: int
     array: np.ndarray
@@ -32,17 +43,30 @@ class Buffer:
 
 
 class MemoryBridge:
-    """Host DDR pool with transaction-logged accelerator access."""
+    """Host DDR pool with transaction-logged accelerator access (§IV).
+
+    With ``congestion`` set, device-side accesses route through the online
+    ``LinkModel``: large transfers are split into ``max_burst_bytes``
+    bursts, the link arbitrates them against every other engine's traffic,
+    and ``self.time`` advances to the modeled completion time.  Host-side
+    accesses (``host_read``/``host_write``) stay free — the paper's
+    firmware dereferencing plain DDR pointers.
+    """
 
     PAGE = 4096
 
-    def __init__(self, log: Optional[TransactionLog] = None) -> None:
+    def __init__(self, log: Optional[TransactionLog] = None,
+                 congestion: Optional[CongestionConfig] = None) -> None:
         self.log = log if log is not None else TransactionLog()
         self._next = 0x1000_0000                    # DDR base
         self.buffers: Dict[str, Buffer] = {}
         self.time = 0.0
+        self.congestion = congestion
+        self.link: Optional[LinkModel] = (
+            LinkModel(congestion) if congestion is not None else None)
 
     def alloc(self, name: str, shape, dtype) -> Buffer:
+        """Reserve a page-aligned DDR region for ``name``."""
         arr = np.zeros(shape, dtype)
         size = -(-arr.nbytes // self.PAGE) * self.PAGE
         buf = Buffer(name, self._next, arr)
@@ -58,41 +82,84 @@ class MemoryBridge:
     def host_read(self, name: str) -> np.ndarray:
         return self.buffers[name].array.copy()
 
-    # Accelerator-side access: transaction-logged bursts.
+    # ------------------------------------------------ device-side access
+    def _dev_bursts(self, buf: Buffer, kind: str, engine: str,
+                    tag: str) -> List[Transaction]:
+        """Split one device transfer into link-level bursts (§IV-C)."""
+        step = self.congestion.max_burst_bytes if self.congestion else 0
+        if step <= 0 or buf.nbytes <= step:
+            return [Transaction(self.time, engine, kind, buf.addr,
+                                buf.nbytes, tag=tag)]
+        return [Transaction(self.time, engine, kind, buf.addr + off,
+                            min(step, buf.nbytes - off), tag=tag)
+                for off in range(0, buf.nbytes, step)]
+
     def dev_read(self, name: str, engine: str = "dma") -> np.ndarray:
+        """Accelerator-side read: transaction-logged, congestion-timed."""
         buf = self.buffers[name]
-        self.time += 1
-        self.log.log(Transaction(self.time, engine, "read", buf.addr,
-                                 buf.nbytes, tag=name))
+        if self.link is not None:
+            self.time = self.link.submit(
+                self._dev_bursts(buf, "read", engine, name), self.log)
+        else:
+            self.time += 1
+            self.log.log(Transaction(self.time, engine, "read", buf.addr,
+                                     buf.nbytes, tag=name))
         return buf.array.copy()
 
     def dev_write(self, name: str, data, engine: str = "dma") -> None:
+        """Accelerator-side write: transaction-logged, congestion-timed."""
         buf = self.buffers[name]
-        self.time += 1
-        self.log.log(Transaction(self.time, engine, "write", buf.addr,
-                                 buf.nbytes, tag=name))
+        if self.link is not None:
+            self.time = self.link.submit(
+                self._dev_bursts(buf, "write", engine, name), self.log)
+        else:
+            self.time += 1
+            self.log.log(Transaction(self.time, engine, "write", buf.addr,
+                                     buf.nbytes, tag=name))
         np.copyto(buf.array, np.asarray(data, buf.array.dtype))
 
     def log_burst_list(self, txs: List[Tuple[str, str, int, int]],
                        base_time: Optional[float] = None) -> None:
         """Log a kernel's static BlockSpec-derived burst list (see
-        kernels/systolic_matmul/ops.transactions)."""
+        kernels/*/ops.transactions).
+
+        With congestion enabled the whole list is arbitrated as one batch
+        through the shared link — engines named in the list contend for
+        bandwidth exactly as the paper's DMA VIPs do on the AXI fabric
+        (Fig. 8) — and ``self.time`` advances to the batch makespan.
+        """
         t = self.time if base_time is None else base_time
+        if self.link is not None:
+            batch = [Transaction(t, engine, kind, addr, nbytes)
+                     for engine, kind, addr, nbytes in txs]
+            self.time = self.link.submit(batch, self.log)
+            return
         for engine, kind, addr, nbytes in txs:
             t += 1
             self.log.log(Transaction(t, engine, kind, addr, nbytes))
         self.time = t
 
+    def congestion_stats(self) -> Optional[CongestionResult]:
+        """Fig. 8 statistics accumulated by the online link so far
+        (None when the bridge runs congestion-free)."""
+        return self.link.result() if self.link is not None else None
+
 
 class FireBridge:
     """Top-level co-verification environment: registers + memory bridge +
-    switchable accelerator backends (paper Fig. 1c)."""
+    switchable accelerator backends (paper Fig. 1c).
+
+    Pass ``congestion`` to emulate interconnect contention online during
+    ``launch()`` (§IV-C): stall statistics are then available from
+    ``congestion_stats()`` as soon as the firmware returns.
+    """
 
     BACKENDS = ("oracle", "interpret", "compiled")
 
-    def __init__(self, name: str = "fb") -> None:
+    def __init__(self, name: str = "fb",
+                 congestion: Optional[CongestionConfig] = None) -> None:
         self.log = TransactionLog()
-        self.mem = MemoryBridge(self.log)
+        self.mem = MemoryBridge(self.log, congestion=congestion)
         self.csr = RegisterFile(f"{name}.csr", self.log)
         self._ops: Dict[str, Dict[str, Callable]] = {}
 
@@ -101,7 +168,8 @@ class FireBridge:
                     compiled: Optional[Callable] = None,
                     burst_list: Optional[Callable] = None) -> None:
         """An accelerator operation with up to three functionally-equivalent
-        backends + an optional static burst-list derivation."""
+        backends + an optional static burst-list derivation (the paper's
+        golden-model / RTL-sim / deployment tiers, Fig. 1)."""
         self._ops[name] = {
             "oracle": oracle,
             "interpret": interpret or oracle,
@@ -115,8 +183,13 @@ class FireBridge:
                out_bufs: List[str], engine: str = "accel",
                burst_list: Optional[Callable] = None, **kw) -> None:
         """Run one accelerator op against named DDR buffers, logging the
-        transaction stream.  `burst_list` (here or at register_op) derives
-        the tile-level DMA bursts from the kernel's BlockSpec schedule."""
+        transaction stream (paper Fig. 3 launch path).
+
+        ``burst_list`` (here or at register_op) derives the tile-level DMA
+        bursts from the kernel's BlockSpec schedule; with congestion
+        enabled those bursts contend on the shared link while the op runs,
+        so per-engine stalls are produced by the launch itself (Fig. 8).
+        """
         assert backend in self.BACKENDS, backend
         fns = self._ops[op]
         args = [self.mem.dev_read(n, engine=f"{engine}_rd") for n in in_bufs]
@@ -128,3 +201,7 @@ class FireBridge:
             outs = (outs,)
         for name, o in zip(out_bufs, outs):
             self.mem.dev_write(name, np.asarray(o), engine=f"{engine}_wr")
+
+    def congestion_stats(self) -> Optional[CongestionResult]:
+        """Per-engine stall/busy/utilization accumulated online (Fig. 8)."""
+        return self.mem.congestion_stats()

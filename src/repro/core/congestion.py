@@ -1,11 +1,26 @@
-"""Memory-congestion emulator (paper §IV-C).
+"""Memory-congestion emulation: shared-link contention model (paper §IV-C).
 
 The paper randomizes AXI handshake signals to stress protocol handling.  The
-TPU-side adaptation replays a transaction stream through a parameterized
+TPU-side adaptation pushes a transaction stream through a parameterized
 shared-link model with seeded random denial-of-service: engines contend for
 interconnect bandwidth, acquire stalls, and the resulting per-engine stall
 statistics are the Fig. 8 "memory stalls" series.  Deterministic under a
 seed, so congestion regressions are testable.
+
+Two entry points share one arbitration core:
+
+* ``LinkModel`` — the *online* model.  A ``MemoryBridge`` constructed with a
+  ``CongestionConfig`` owns one and routes every device access and burst
+  list through it as the firmware runs, so ``bridge.time``, per-engine
+  stalls, and makespan reflect Fig. 8 semantics live, with no post-hoc
+  replay step.
+* ``simulate`` — the *offline* replay.  Feeds a complete recorded stream
+  through a fresh ``LinkModel`` in one batch; used for what-if re-runs of a
+  logged stream under a different link configuration.
+
+Feeding a stream to ``simulate`` and submitting the same stream as a single
+``LinkModel.submit`` batch produce identical timing — they are the same
+loop (see tests/test_core_bridge.py::test_online_matches_offline_replay).
 """
 from __future__ import annotations
 
@@ -20,6 +35,16 @@ from repro.core.transactions import Transaction, TransactionLog
 
 @dataclasses.dataclass(frozen=True)
 class CongestionConfig:
+    """Shared-interconnect parameters (paper §IV-C / Fig. 8).
+
+    ``priorities`` reproduces the paper's "input DMA was given higher
+    priority" experiment: higher values win arbitration when contending;
+    ties fall back to round-robin.  ``dos_prob``/``dos_stall`` are the
+    seeded denial-of-service injection (the AXI-handshake randomization
+    analogue).  ``max_burst_bytes`` splits whole-buffer device transfers
+    into link-level bursts so a large ``dev_read`` contends at burst
+    granularity rather than monopolizing the link in one transaction.
+    """
     link_bytes_per_cycle: float = 128.0     # shared interconnect width
     base_latency: float = 40.0              # cycles per burst (DDR-ish)
     dos_prob: float = 0.0                   # P(denial-of-service per tx)
@@ -30,10 +55,14 @@ class CongestionConfig:
     # contending; ties round-robin) — the paper's "input DMA was given
     # higher priority" experiment (Fig. 8).
     priorities: tuple = ()                  # of (engine, prio) pairs
+    # split device transfers into bursts of at most this many bytes when
+    # routed through the online link (0 = never split).
+    max_burst_bytes: int = 4096
 
 
 @dataclasses.dataclass
 class CongestionResult:
+    """Per-run link statistics — the Fig. 8 stall/utilization series."""
     makespan: float
     per_engine_stall: Dict[str, float]
     per_engine_busy: Dict[str, float]
@@ -49,64 +78,109 @@ class CongestionResult:
         }
 
 
+class LinkModel:
+    """Stateful shared-link arbiter — the online congestion model (§IV-C).
+
+    One instance models one interconnect.  ``submit`` arbitrates a batch of
+    transactions (a kernel burst list, or a single device access) against
+    the link state left by every earlier batch: per-engine ready times, the
+    link-free horizon, the round-robin pointer, and the seeded DoS stream
+    all persist across submissions, so firmware-program-order contention is
+    modeled exactly as it happens.
+
+    Within a batch, arbitration is priority-then-round-robin per engine,
+    identical to the paper's interconnect arbiter; per-engine program order
+    is always preserved.  Mutates each transaction's ``stall``/``complete``
+    fields in place.
+    """
+
+    def __init__(self, cfg: CongestionConfig) -> None:
+        self.cfg = cfg
+        self._rng = np.random.default_rng(cfg.seed)
+        self._prio = dict(cfg.priorities)
+        self._link_free = 0.0
+        self._ready: Dict[str, float] = defaultdict(float)
+        self._busy: Dict[str, float] = defaultdict(float)
+        self._stall: Dict[str, float] = defaultdict(float)
+        self._total_bytes = 0
+        self._rr = 0
+        self.timeline: List[Transaction] = []
+
+    @property
+    def now(self) -> float:
+        """Link-free horizon: completion time of the last transfer."""
+        return self._link_free
+
+    def submit(self, txs: List[Transaction],
+               log: Optional[TransactionLog] = None) -> float:
+        """Arbitrate one batch of transactions through the shared link.
+
+        Transactions must be in per-engine program order; ``time`` fields
+        are minimum issue times (0 = ASAP).  Returns the completion time of
+        the last transaction in the batch.
+        """
+        cfg = self.cfg
+        queues: Dict[str, List[Transaction]] = defaultdict(list)
+        for t in txs:
+            queues[t.engine].append(t)
+        heads = {e: 0 for e in queues}
+        engines = sorted(queues, key=lambda e: (-self._prio.get(e, 0), e))
+        last = self._link_free
+        while any(heads[e] < len(queues[e]) for e in engines):
+            # highest-priority engine with pending work; ties round-robin
+            pending = [e for e in engines if heads[e] < len(queues[e])]
+            top = max(self._prio.get(e, 0) for e in pending)
+            cand = [e for e in pending if self._prio.get(e, 0) == top]
+            e = cand[self._rr % len(cand)]
+            self._rr += 1
+            tx = queues[e][heads[e]]
+            heads[e] += 1
+            issue = max(self._ready[e], tx.time)
+            start = max(issue, self._link_free)
+            wait = start - issue
+            dos = 0.0
+            if cfg.dos_prob > 0 and self._rng.random() < cfg.dos_prob:
+                dos = cfg.dos_stall
+            xfer = cfg.base_latency + tx.nbytes / cfg.link_bytes_per_cycle
+            tx.stall = wait + dos
+            tx.complete = start + dos + xfer
+            self._link_free = tx.complete
+            self._ready[e] = tx.complete + cfg.per_engine_issue_gap
+            self._busy[e] += xfer
+            self._stall[e] += tx.stall
+            self._total_bytes += tx.nbytes
+            self.timeline.append(tx)
+            last = tx.complete
+            if log is not None:
+                log.log(tx)
+        return last
+
+    def result(self) -> CongestionResult:
+        """Snapshot the Fig. 8 statistics accumulated so far."""
+        makespan = max((t.complete for t in self.timeline), default=0.0)
+        util = ((self._total_bytes / self.cfg.link_bytes_per_cycle)
+                / makespan if makespan else 0.0)
+        return CongestionResult(
+            makespan=makespan,
+            per_engine_stall=dict(self._stall),
+            per_engine_busy=dict(self._busy),
+            link_utilization=util,
+            timeline=list(self.timeline),
+        )
+
+
 def simulate(txs: List[Transaction], cfg: CongestionConfig,
              log: Optional[TransactionLog] = None) -> CongestionResult:
-    """Replay transactions through one shared link, round-robin arbitration.
+    """Offline replay (§IV-C): a recorded stream through a fresh link.
 
-    Transactions must be in per-engine program order; `time` fields are used
-    as minimum issue times (0 = ASAP).  Mutates tx.stall/tx.complete.
+    Transactions must be in per-engine program order; ``time`` fields are
+    used as minimum issue times (0 = ASAP).  Mutates tx.stall/tx.complete.
+    Identical timing to submitting the same stream as one ``LinkModel``
+    batch — both run the same arbitration core.
     """
-    rng = np.random.default_rng(cfg.seed)
-    queues: Dict[str, List[Transaction]] = defaultdict(list)
-    for t in txs:
-        queues[t.engine].append(t)
-    heads = {e: 0 for e in queues}
-    ready = {e: 0.0 for e in queues}
-    link_free = 0.0
-    busy: Dict[str, float] = defaultdict(float)
-    stall: Dict[str, float] = defaultdict(float)
-    total_bytes = 0
-    done: List[Transaction] = []
-
-    prio = dict(cfg.priorities)
-    engines = sorted(queues, key=lambda e: (-prio.get(e, 0), e))
-    rr = 0
-    while any(heads[e] < len(queues[e]) for e in engines):
-        # highest-priority engine with pending work; ties round-robin
-        pending = [e for e in engines if heads[e] < len(queues[e])]
-        top = max(prio.get(e, 0) for e in pending)
-        cand = [e for e in pending if prio.get(e, 0) == top]
-        e = cand[rr % len(cand)]
-        rr += 1
-        tx = queues[e][heads[e]]
-        heads[e] += 1
-        issue = max(ready[e], tx.time)
-        start = max(issue, link_free)
-        wait = start - issue
-        dos = 0.0
-        if cfg.dos_prob > 0 and rng.random() < cfg.dos_prob:
-            dos = cfg.dos_stall
-        xfer = cfg.base_latency + tx.nbytes / cfg.link_bytes_per_cycle
-        tx.stall = wait + dos
-        tx.complete = start + dos + xfer
-        link_free = tx.complete
-        ready[e] = tx.complete + cfg.per_engine_issue_gap
-        busy[e] += xfer
-        stall[e] += tx.stall
-        total_bytes += tx.nbytes
-        done.append(tx)
-        if log is not None:
-            log.log(tx)
-
-    makespan = max((t.complete for t in done), default=0.0)
-    util = (total_bytes / cfg.link_bytes_per_cycle) / makespan if makespan else 0.0
-    return CongestionResult(
-        makespan=makespan,
-        per_engine_stall=dict(stall),
-        per_engine_busy=dict(busy),
-        link_utilization=util,
-        timeline=done,
-    )
+    lm = LinkModel(cfg)
+    lm.submit(txs, log)
+    return lm.result()
 
 
 def collective_stream_to_txs(collectives, time_scale: float = 1.0

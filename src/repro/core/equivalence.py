@@ -76,11 +76,15 @@ def compare(a: Any, b: Any, names: Tuple[str, str], tol: float
     return None
 
 
-def check_equivalence(fns: Dict[str, Callable], args: tuple,
-                      tol: float = 1e-4) -> EquivalenceReport:
-    """Run every backend on identical inputs and compare all vs the first."""
-    names = list(fns)
-    outs = {n: fns[n](*args) for n in names}
+def compare_outputs(outs: Dict[str, Any],
+                    tol: float = 1e-4) -> EquivalenceReport:
+    """Compare already-computed per-backend outputs, all vs the first.
+
+    This is the comparison consumed by the CoVerifySession sweep scheduler
+    (core/scheduler.py): each sweep group hands in the final DDR state per
+    backend and gets back one localized report per group.
+    """
+    names = list(outs)
     divs: List[Divergence] = []
     base = names[0]
     for other in names[1:]:
@@ -89,3 +93,9 @@ def check_equivalence(fns: Dict[str, Callable], args: tuple,
             divs.append(d)
     return EquivalenceReport(passed=not divs, tol=tol, backends=names,
                              divergences=divs)
+
+
+def check_equivalence(fns: Dict[str, Callable], args: tuple,
+                      tol: float = 1e-4) -> EquivalenceReport:
+    """Run every backend on identical inputs and compare all vs the first."""
+    return compare_outputs({n: fn(*args) for n, fn in fns.items()}, tol)

@@ -1,0 +1,225 @@
+"""Batched multi-backend co-verification scheduler (paper §V / Fig. 5).
+
+One debug iteration in the paper is: edit firmware, re-simulate, re-check
+equivalence.  At sweep scale — many ops x backends x configs — running
+those iterations one at a time leaves the simulator idle while Python sets
+up the next cell and recompiles backends it has already compiled.  The
+``CoVerifySession`` scheduler batches the sweep:
+
+* a sweep **cell** is one ``(op, backend, config)`` triple, executed as
+  firmware against a fresh ``FireBridge`` (optionally with the online
+  congestion link, §IV-C);
+* backend callables are registered **once per session** and shared across
+  every cell, so jitted/compiled executables are cached across the sweep
+  instead of re-traced per iteration (the FireSim-style "build once, run
+  many" economy);
+* independent cells run **concurrently** on a thread pool — interpret-mode
+  Pallas, XLA, and NumPy all release the GIL during compute, so
+  oracle/interpret/compiled cells overlap on wall-clock;
+* results are grouped by ``(op, config)`` and diffed across backends via
+  ``equivalence.compare_outputs``, producing a structured ``SweepReport``
+  with per-cell timing, stall statistics, and localized divergences.
+
+benchmarks/bench_debug_iteration.py measures this scheduler against the
+sequential per-op loop on a >=8-cell sweep (the Fig. 5 batched lane).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bridge import FireBridge
+from repro.core.congestion import CongestionConfig, CongestionResult
+from repro.core.equivalence import EquivalenceReport, compare_outputs
+
+
+def _config_key(config: Dict[str, Any]) -> Tuple:
+    """Hashable identity of a cell config (for cross-backend grouping)."""
+    return tuple(sorted((k, repr(v)) for k, v in config.items()))
+
+
+@dataclasses.dataclass
+class SweepCell:
+    """One sweep point: run ``op`` on ``backend`` with ``config`` kwargs.
+
+    Cells sharing ``(op, config)`` across different backends form one
+    equivalence group — the paper's golden-model / RTL-sim / deployment
+    triangle (Fig. 1) evaluated at one design point.
+    """
+    op: str
+    backend: str
+    config: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    congestion: Optional[CongestionConfig] = None
+
+    @property
+    def label(self) -> str:
+        cfg = ",".join(f"{k}={v}" for k, v in sorted(self.config.items()))
+        return f"{self.op}[{cfg}]@{self.backend}"
+
+
+@dataclasses.dataclass
+class CellResult:
+    """Outcome of one executed cell."""
+    cell: SweepCell
+    outputs: Dict[str, np.ndarray]      # final DDR state, buffer name -> arr
+    seconds: float                      # wall-clock of the firmware run
+    bridge_time: float                  # modeled cycles (congestion-aware)
+    congestion: Optional[CongestionResult]
+    violations: List[str]
+    error: Optional[str] = None
+
+
+@dataclasses.dataclass
+class SweepReport:
+    """Structured sweep outcome (consumed by callers + benchmarks).
+
+    ``equivalence`` holds one localized report per ``(op, config)`` group
+    (cross-backend diff of final DDR state, §IV-B); ``passed`` requires
+    every group equivalent, no cell errors, no protocol violations.
+    """
+    cells: List[CellResult]
+    equivalence: Dict[str, EquivalenceReport]
+    wall_seconds: float
+
+    @property
+    def passed(self) -> bool:
+        return (all(r.error is None and not r.violations for r in self.cells)
+                and all(e.passed for e in self.equivalence.values()))
+
+    def summary(self) -> dict:
+        return {
+            "cells": len(self.cells),
+            "groups": len(self.equivalence),
+            "passed": self.passed,
+            "wall_seconds": round(self.wall_seconds, 3),
+            "cell_seconds_sum": round(sum(r.seconds for r in self.cells), 3),
+            "failures": [g for g, e in self.equivalence.items()
+                         if not e.passed] +
+                        [r.cell.label for r in self.cells if r.error],
+        }
+
+    def to_rows(self) -> List[str]:
+        """CSV-ish rows for benchmark output."""
+        rows = ["cell,backend,seconds,bridge_cycles,stall_cycles,status"]
+        for r in self.cells:
+            stall = (sum(r.congestion.per_engine_stall.values())
+                     if r.congestion else 0.0)
+            status = "error" if r.error else "ok"
+            rows.append(f"{r.cell.op},{r.cell.backend},{r.seconds:.3f},"
+                        f"{r.bridge_time:.0f},{stall:.0f},{status}")
+        return rows
+
+
+class CoVerifySession:
+    """Batched co-verification sweep scheduler (Fig. 5 batched lane).
+
+    Usage::
+
+        sess = CoVerifySession(firmware)
+        sess.register_op("mm", oracle=..., interpret=..., compiled=...)
+        sess.add_sweep("mm", backends=("oracle", "interpret"),
+                       configs=[{"size": 64}, {"size": 128}])
+        report = sess.run(max_workers=4)
+
+    ``firmware(fb, op, backend, **config)`` is the host-side program (data
+    movement + CSR protocol + ``fb.launch``); it runs unmodified against
+    every backend — the paper's equivalence guarantee.  Backend callables
+    are registered once and shared across all cells, so XLA compilation is
+    cached across the sweep; cells execute concurrently on a thread pool.
+    """
+
+    def __init__(self, firmware: Callable[..., None],
+                 congestion: Optional[CongestionConfig] = None) -> None:
+        self.firmware = firmware
+        self.congestion = congestion
+        self._ops: Dict[str, Dict[str, Any]] = {}
+        self.cells: List[SweepCell] = []
+
+    # ------------------------------------------------------------- setup
+    def register_op(self, name: str, *, oracle: Callable,
+                    interpret: Optional[Callable] = None,
+                    compiled: Optional[Callable] = None,
+                    burst_list: Optional[Callable] = None) -> None:
+        """Register one accelerator op's backend table, shared by every
+        cell in the sweep (the compiled-executable cache)."""
+        self._ops[name] = dict(oracle=oracle, interpret=interpret,
+                               compiled=compiled, burst_list=burst_list)
+
+    def add_cell(self, op: str, backend: str,
+                 config: Optional[Dict[str, Any]] = None,
+                 congestion: Optional[CongestionConfig] = None) -> SweepCell:
+        """Append one ``(op, backend, config)`` cell to the sweep."""
+        if op not in self._ops:
+            raise KeyError(f"op {op!r} not registered")
+        cell = SweepCell(op, backend, dict(config or {}),
+                         congestion or self.congestion)
+        self.cells.append(cell)
+        return cell
+
+    def add_sweep(self, op: str, backends: Tuple[str, ...],
+                  configs: List[Dict[str, Any]]) -> List[SweepCell]:
+        """Cross-product convenience: one cell per (backend, config)."""
+        return [self.add_cell(op, be, cfg)
+                for cfg in configs for be in backends]
+
+    # ----------------------------------------------------------- execute
+    def _run_cell(self, cell: SweepCell) -> CellResult:
+        fb = FireBridge(congestion=cell.congestion)
+        fb.register_op(cell.op, **self._ops[cell.op])
+        t0 = time.perf_counter()
+        err: Optional[str] = None
+        try:
+            self.firmware(fb, cell.op, cell.backend, **cell.config)
+        except Exception as e:            # cell failure must not kill sweep
+            err = f"{type(e).__name__}: {e}"
+        dt = time.perf_counter() - t0
+        return CellResult(
+            cell=cell,
+            outputs={n: b.array.copy() for n, b in fb.mem.buffers.items()},
+            seconds=dt,
+            bridge_time=fb.mem.time,
+            congestion=fb.congestion_stats(),
+            violations=list(fb.log.violations),
+            error=err,
+        )
+
+    def run(self, max_workers: Optional[int] = None,
+            tol: float = 1e-3) -> SweepReport:
+        """Execute every cell (concurrently) and cross-check backends.
+
+        Cells are independent, so they are dispatched to a thread pool;
+        results are then grouped by ``(op, config)`` and the final DDR
+        state is diffed across backends with first-divergence localization
+        (equivalence.compare_outputs, §IV-B).
+        """
+        t0 = time.perf_counter()
+        if max_workers == 1 or len(self.cells) <= 1:
+            results = [self._run_cell(c) for c in self.cells]
+        else:
+            with ThreadPoolExecutor(max_workers=max_workers) as ex:
+                results = list(ex.map(self._run_cell, self.cells))
+        wall = time.perf_counter() - t0
+
+        groups: Dict[Tuple, Dict[str, Dict[str, np.ndarray]]] = {}
+        labels: Dict[Tuple, str] = {}
+        for r in results:
+            key = (r.cell.op, _config_key(r.cell.config))
+            groups.setdefault(key, {})[r.cell.backend] = r.outputs
+            cfg = ",".join(f"{k}={v}"
+                           for k, v in sorted(r.cell.config.items()))
+            labels[key] = f"{r.cell.op}[{cfg}]"
+        eq = {labels[k]: compare_outputs(outs, tol=tol)
+              for k, outs in groups.items() if len(outs) > 1}
+        return SweepReport(cells=results, equivalence=eq, wall_seconds=wall)
+
+
+def run_sequential(session: CoVerifySession, tol: float = 1e-3
+                   ) -> SweepReport:
+    """The pre-batching baseline: execute the same cells one at a time on
+    fresh per-cell state (no thread pool).  Kept as the comparison lane for
+    bench_debug_iteration.py's Fig. 5 sweep measurement."""
+    return session.run(max_workers=1, tol=tol)

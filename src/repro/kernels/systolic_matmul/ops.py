@@ -20,8 +20,9 @@ def transactions(M: int, N: int, K: int, *, bm=128, bn=128, bk=128,
 
     Returns [(engine, direction, address, nbytes)] in grid order — the
     TPU-side analogue of the AXI burst list FireBridge logs from its DMA
-    VIPs.  Fed to core/transactions.py for Fig. 8/9-style profiling and to
-    core/congestion.py for contention emulation.
+    VIPs (§IV).  Fed to core/transactions.py for Fig. 8/9-style profiling
+    and arbitrated online by the congestion LinkModel (§IV-C) when the
+    bridge runs with a CongestionConfig.
     """
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
     txs: List[Tuple[str, str, int, int]] = []

@@ -1,0 +1,60 @@
+"""Reusable matmul co-verification sweep pieces (paper Fig. 5 cells).
+
+One firmware + one backend table for the systolic matmul, shared by the
+quickstart preflight, the Fig. 5 sweep benchmark, and the scheduler tests
+so the three stay in lockstep.  The firmware signature matches
+core/scheduler.CoVerifySession: ``firmware(fb, op, backend, **config)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.systolic_matmul import ops as mm_ops, ref as mm_ref
+from repro.kernels.systolic_matmul.kernel import matmul as mm_kernel
+
+
+def matmul_firmware(fb, op, backend, *, size, tile: int = 32):
+    """Host-side program for one sweep cell: alloc/seed DDR, launch the
+    matmul with its per-tile burst list (§IV data-movement contract)."""
+    rng = np.random.default_rng(size)
+    a = rng.normal(size=(size, size)).astype(np.float32)
+    b = rng.normal(size=(size, size)).astype(np.float32)
+    fb.mem.alloc("a", a.shape, np.float32)
+    fb.mem.alloc("b", b.shape, np.float32)
+    fb.mem.alloc("c", (size, size), np.float32)
+    fb.mem.host_write("a", a)
+    fb.mem.host_write("b", b)
+    fb.launch(op, backend, ["a", "b"], ["c"],
+              burst_list=lambda: mm_ops.transactions(
+                  size, size, size, bm=tile, bn=tile, bk=tile,
+                  dtype_bytes=4))
+
+
+def matmul_backends(tile: int = 32, jit: bool = True) -> dict:
+    """oracle/interpret/compiled backend table for register_op.
+
+    With ``jit`` the interpret and compiled backends are jitted ONCE at
+    table-creation time — registering one table per CoVerifySession is
+    what makes traces/executables cache across sweep cells; re-creating
+    the table per cell (the sequential baseline) re-pays tracing.
+    """
+    oracle = lambda x, y: np.asarray(mm_ref.matmul_ref(jnp.asarray(x),
+                                                       jnp.asarray(y)))
+    if not jit:
+        return dict(
+            oracle=oracle,
+            interpret=lambda x, y: np.asarray(mm_kernel(
+                jnp.asarray(x), jnp.asarray(y), bm=tile, bn=tile, bk=tile,
+                interpret=True)),
+            compiled=oracle)
+    jit_interp = jax.jit(lambda x, y: mm_kernel(
+        x, y, bm=tile, bn=tile, bk=tile, interpret=True))
+    jit_mm = jax.jit(lambda x, y: mm_ref.matmul_ref(x, y))
+    return dict(
+        oracle=oracle,
+        interpret=lambda x, y: np.asarray(jit_interp(jnp.asarray(x),
+                                                     jnp.asarray(y))),
+        compiled=lambda x, y: np.asarray(jit_mm(jnp.asarray(x),
+                                                jnp.asarray(y))))

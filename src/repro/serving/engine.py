@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.bridge import MemoryBridge
+from repro.core.congestion import CongestionConfig, CongestionResult
 from repro.core.registers import RO, RegisterFile
 from repro.models.transformer import (RunFlags, ShardCtx, cache_insert,
                                       init_cache, make_decode_fn,
@@ -47,7 +48,8 @@ class ServingEngine:
                  max_len: int = 256,
                  flags: RunFlags = RunFlags(microbatches=1),
                  ctx: Optional[ShardCtx] = None,
-                 prompt_pad: int = 16):
+                 prompt_pad: int = 16,
+                 congestion: Optional[CongestionConfig] = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -63,8 +65,9 @@ class ServingEngine:
         self.requests: Dict[int, Request] = {}
         self.completed = 0
 
-        # control plane
-        self.mem = MemoryBridge()
+        # control plane; with `congestion` the prompt/token DMA traffic is
+        # arbitrated online through the shared-link model (paper §IV-C)
+        self.mem = MemoryBridge(congestion=congestion)
         self.csr = RegisterFile("serve.csr", self.mem.log)
         self.csr.define("CTRL", CTRL)
         self.csr.define("STATUS", STATUS, access=RO)
@@ -144,8 +147,13 @@ class ServingEngine:
                 s.out_tokens.append(int(nxt[i]))
                 if len(s.out_tokens) >= s.max_new_tokens:
                     s.done = True
-                    out = self.mem.buffers["tokens_out"].array
-                    out[i, :len(s.out_tokens)] = s.out_tokens
+                    # row-sized DMA writeback: only slot i's tokens move
+                    buf = self.mem.buffers["tokens_out"]
+                    buf.array[i, :len(s.out_tokens)] = s.out_tokens
+                    row = buf.array[i]
+                    self.mem.log_burst_list(
+                        [("serve_dma", "write",
+                          buf.addr + i * row.nbytes, row.nbytes)])
                     self.slots[i] = None
                     self.completed += 1
                     self.csr.hw_set("COMPLETED", self.completed)
@@ -160,6 +168,11 @@ class ServingEngine:
 
     def _n_active(self) -> int:
         return sum(s is not None for s in self.slots)
+
+    def congestion_stats(self) -> Optional[CongestionResult]:
+        """Fig. 8 stall statistics of the serving DMA traffic (None when
+        the engine runs congestion-free)."""
+        return self.mem.congestion_stats()
 
     def run_until_done(self, max_ticks: int = 10_000) -> None:
         self.csr.hw_set("STATUS", 1)

@@ -14,6 +14,7 @@ FLAGS = RunFlags(attn_impl="chunked", q_chunk=16, kv_chunk=16)
 B, S = 2, 64
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_forward_and_train_step(arch):
     cfg = smoke(get_config(arch))

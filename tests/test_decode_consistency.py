@@ -13,6 +13,8 @@ from repro.models import (RunFlags, init_params, make_decode_fn,
                           make_prefill_fn)
 from repro.models.inputs import make_prefill_batch
 
+pytestmark = pytest.mark.slow      # decode sweep: ~40s across families
+
 FLAGS = RunFlags(attn_impl="chunked", q_chunk=16, kv_chunk=16,
                  compute_dtype="float32")
 B, S, S0 = 2, 64, 48

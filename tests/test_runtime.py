@@ -23,6 +23,7 @@ def _trainer(tmp, steps=10, injector=None, ckpt_every=4):
     return Trainer(cfg, tcfg, FLAGS, failure_injector=injector)
 
 
+@pytest.mark.slow
 def test_failure_recovery_and_completion(tmp_path):
     inj = FailureInjector(fail_steps=[6])
     tr = _trainer(tmp_path / "c1", steps=10, injector=inj)
@@ -33,6 +34,7 @@ def test_failure_recovery_and_completion(tmp_path):
     assert tr.csr.hw_get("STATUS") == 2
 
 
+@pytest.mark.slow
 def test_resume_from_checkpoint(tmp_path):
     tr = _trainer(tmp_path / "c2", steps=8)
     tr.train()
@@ -71,8 +73,8 @@ def test_checkpoint_roundtrip_and_reshard(tmp_path):
     mgr.save(9, state)
     assert mgr.list_steps() == [5, 9]          # keep=2 gc
     like = jax.eval_shape(lambda: state)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_test_mesh
+    mesh = make_test_mesh((1, 1), ("data", "model"))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = {"w": NamedSharding(mesh, P("data", None)),
           "step": NamedSharding(mesh, P())}

@@ -1,0 +1,133 @@
+"""CoVerifySession: batched sweep execution, cross-backend grouping,
+divergence localization, congestion-aware cells, per-tile kernel burst
+lists (core/scheduler.py; paper Fig. 5 batched lane)."""
+import numpy as np
+import pytest
+
+from repro.core import CongestionConfig, CoVerifySession
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.mamba2_scan import ops as ssd_ops
+from repro.kernels.rwkv6_wkv import ops as wkv_ops
+from repro.kernels.systolic_matmul.sweep import (matmul_backends,
+                                                 matmul_firmware)
+
+_firmware = matmul_firmware
+
+
+def _session(bug: bool = False, congestion=None) -> CoVerifySession:
+    table = matmul_backends(jit=False)
+
+    def interp(a, b):
+        out = np.array(table["interpret"](a, b))
+        if bug:
+            out[1, 2] += 1.0                  # injected hardware bug
+        return out
+
+    sess = CoVerifySession(_firmware, congestion=congestion)
+    sess.register_op("mm", oracle=table["oracle"], interpret=interp)
+    return sess
+
+
+def test_sweep_runs_all_cells_and_groups():
+    sess = _session()
+    cells = sess.add_sweep("mm", ("oracle", "interpret"),
+                           [{"size": 32}, {"size": 64}])
+    assert len(cells) == 4
+    report = sess.run(max_workers=2)
+    assert report.passed
+    assert len(report.cells) == 4
+    assert len(report.equivalence) == 2       # one group per config
+    assert all(r.seconds > 0 for r in report.cells)
+    assert report.summary()["cells"] == 4
+    assert len(report.to_rows()) == 5         # header + 4 cells
+
+
+def test_sweep_localizes_divergence_per_group():
+    sess = _session(bug=True)
+    sess.add_sweep("mm", ("oracle", "interpret"), [{"size": 32}])
+    report = sess.run()
+    assert not report.passed
+    (eq,) = report.equivalence.values()
+    d = eq.divergences[0]
+    assert d.leaf_path == "c" and d.index == (1, 2)
+    assert abs(d.max_abs_err - 1.0) < 1e-3
+
+
+def test_sweep_cells_carry_online_congestion():
+    cong = CongestionConfig(seed=3, priorities=(("dma_a", 1),))
+    sess = _session(congestion=cong)
+    sess.add_sweep("mm", ("oracle",), [{"size": 64}])
+    report = sess.run()
+    (r,) = report.cells
+    assert r.congestion is not None and r.congestion.makespan > 0
+    assert sum(r.congestion.per_engine_stall.values()) > 0
+    assert r.bridge_time >= r.congestion.makespan
+
+
+def test_cell_error_is_contained():
+    sess = _session()
+    sess.register_op("boom", oracle=lambda *a: (_ for _ in ()).throw(
+        RuntimeError("dead op")))
+    sess.add_cell("mm", "oracle", {"size": 32})
+    sess.add_cell("boom", "oracle", {"size": 32})
+    report = sess.run(max_workers=2)
+    assert not report.passed
+    errs = [r for r in report.cells if r.error]
+    assert len(errs) == 1 and "dead op" in errs[0].error
+
+
+def test_add_cell_rejects_unknown_op():
+    sess = _session()
+    with pytest.raises(KeyError):
+        sess.add_cell("nope", "oracle")
+
+
+def test_sequential_and_batched_agree():
+    sess = _session()
+    sess.add_sweep("mm", ("oracle", "interpret"),
+                   [{"size": 32}, {"size": 64}])
+    seq = sess.run(max_workers=1)
+    bat = sess.run(max_workers=4)
+    assert seq.passed and bat.passed
+    for a, b in zip(seq.cells, bat.cells):
+        assert a.cell.label == b.cell.label
+        for name in a.outputs:
+            np.testing.assert_array_equal(a.outputs[name], b.outputs[name])
+
+
+# ------------------------------------------------- per-tile burst lists
+def _check_bursts(txs, n_engines_min=2):
+    assert txs, "burst list is empty"
+    assert all(nb > 0 and addr >= 0 for _, _, addr, nb in txs)
+    assert len({e for e, _, _, _ in txs}) >= n_engines_min
+    kinds = {k for _, k, _, _ in txs}
+    assert kinds <= {"read", "write"} and "read" in kinds
+
+
+def test_flash_burst_list_per_tile():
+    txs = fa_ops.transactions(2, 4, 256, 256, 64, bq=128, bk=128,
+                              causal=True, dtype_bytes=2)
+    _check_bursts(txs, 4)
+    # causal skips the upper-triangular KV tiles: fewer k reads than full
+    full = fa_ops.transactions(2, 4, 256, 256, 64, bq=128, bk=128,
+                               causal=False, dtype_bytes=2)
+    n_k = sum(1 for e, _, _, _ in txs if e == "dma_k")
+    n_k_full = sum(1 for e, _, _, _ in full if e == "dma_k")
+    assert n_k < n_k_full
+    # per-tile: every burst is one tile, not a whole buffer
+    assert max(nb for _, _, _, nb in txs) == 128 * 64 * 2
+
+
+def test_ssd_burst_list_per_tile():
+    txs = ssd_ops.transactions(2, 256, 16, 32, 64, chunk=128, hb=8)
+    _check_bursts(txs, 4)
+    # state writes once per (batch, head-group), not per chunk
+    n_state = sum(1 for e, _, _, _ in txs if e == "dma_state")
+    assert n_state == 2 * (16 // 8)
+
+
+def test_wkv_burst_list_per_tile():
+    txs = wkv_ops.transactions(2, 64, 16, 32, chunk=16, hb=8)
+    _check_bursts(txs, 4)
+    n_state = sum(1 for e, _, _, _ in txs if e == "dma_state")
+    assert n_state == 2 * (16 // 8)

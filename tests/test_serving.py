@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, smoke
 from repro.models import init_params
@@ -58,6 +59,7 @@ def test_continuous_batching_oversubscription():
     assert eng.completed == 4
 
 
+@pytest.mark.slow
 def test_decode_matches_unbatched_prefill():
     """A slot's generation is independent of other slots (cache isolation)."""
     cfg, eng1 = _engine(max_slots=1)

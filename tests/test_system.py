@@ -6,6 +6,7 @@ from pathlib import Path
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config, smoke
 from repro.models.transformer import RunFlags
@@ -14,6 +15,7 @@ from repro.runtime import Trainer, TrainerConfig
 FLAGS = RunFlags(attn_impl="chunked", q_chunk=16, kv_chunk=16)
 
 
+@pytest.mark.slow
 def test_training_loss_decreases(tmp_path):
     cfg = smoke(get_config("llama3.2-1b"))
     tcfg = TrainerConfig(seq_len=128, global_batch=8, steps=30,
