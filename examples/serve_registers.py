@@ -51,8 +51,14 @@ def main():
         eng.csr.fb_write_32(eng.csr.addr_of("DOORBELL"), 1)
 
     eng.run_until_done()
+    # firmware-style completion wait: poll STATUS for the done value (2).
+    # poll() returns -1 on timeout (distinguishable from success), so a
+    # hung engine is detected instead of read as "finished on last poll".
+    polls = eng.csr.poll("STATUS", 0xFFFFFFFF, 2, max_reads=8)
+    if polls < 0:
+        sys.exit("engine never reached STATUS=done (poll timeout)")
     done = eng.csr.fb_read_32(eng.csr.addr_of("COMPLETED"))
-    print(f"COMPLETED register: {done}")
+    print(f"COMPLETED register: {done} (STATUS done after {polls} poll(s))")
     for rid, r in sorted(eng.requests.items()):
         print(f"  req {rid}: prompt[{len(r.prompt)}] -> {r.out_tokens}")
     print("\nregister/DMA transaction summary:")

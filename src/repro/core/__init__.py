@@ -8,6 +8,8 @@
   equivalence   — oracle ≡ interpret ≡ compiled checking w/ localization
   coverify      — one-call co-verification driver (debug-iteration unit)
   scheduler     — batched multi-backend sweep scheduler (Fig. 5 at scale)
+  fuzz          — seeded fault injection + randomized protocol stimulus
+                  with differential checking and trace shrinking
   hlo_profiler  — compiled-HLO transaction extraction + roofline terms
 """
 from repro.core.bridge import Buffer, FireBridge, MemoryBridge
@@ -16,6 +18,8 @@ from repro.core.congestion import (CongestionConfig, CongestionResult,
 from repro.core.coverify import CoverifyResult, coverify
 from repro.core.equivalence import (EquivalenceReport, check_equivalence,
                                     compare_outputs)
+from repro.core.fuzz import (FaultEvent, FaultPlan, FuzzReport,
+                             ProtocolFuzzer, run_fuzz)
 from repro.core.registers import DOORBELL, RO, RW, W1C, RegisterFile
 from repro.core.scheduler import (CellResult, CoVerifySession, SweepCell,
                                   SweepReport, run_sequential)
@@ -25,6 +29,7 @@ __all__ = [
     "Buffer", "FireBridge", "MemoryBridge", "CongestionConfig",
     "CongestionResult", "LinkModel", "simulate", "CoverifyResult",
     "coverify", "EquivalenceReport", "check_equivalence", "compare_outputs",
+    "FaultEvent", "FaultPlan", "FuzzReport", "ProtocolFuzzer", "run_fuzz",
     "RegisterFile", "RO", "RW", "W1C", "DOORBELL", "CellResult",
     "CoVerifySession", "SweepCell", "SweepReport", "run_sequential",
     "Transaction", "TransactionLog",

@@ -15,6 +15,12 @@ arbitrated through a shared ``LinkModel`` as the firmware runs, so
 statistics (Fig. 8) accumulate during ``launch()`` — no post-hoc replay
 step.  Without a config the original fast path is preserved (one logical
 cycle per access).
+
+Fault injection is also online: construct the bridge with a ``FaultPlan``
+(core/fuzz.py) and device-side bursts may be delayed/reordered/split, the
+congestion config perturbed, and ``dev_read`` data transiently bit-flipped
+behind an audited ECC-style retry — the paper's randomized memory bridge
+(§IV).  Every injected fault is recorded in ``log.faults``.
 """
 from __future__ import annotations
 
@@ -56,17 +62,26 @@ class MemoryBridge:
     PAGE = 4096
 
     def __init__(self, log: Optional[TransactionLog] = None,
-                 congestion: Optional[CongestionConfig] = None) -> None:
+                 congestion: Optional[CongestionConfig] = None,
+                 fault_plan: Optional["FaultPlan"] = None) -> None:
         self.log = log if log is not None else TransactionLog()
         self._next = 0x1000_0000                    # DDR base
         self.buffers: Dict[str, Buffer] = {}
         self.time = 0.0
+        self.fault_plan = fault_plan
+        if fault_plan is not None and congestion is not None:
+            congestion = fault_plan.perturb_congestion(congestion, self.log)
         self.congestion = congestion
         self.link: Optional[LinkModel] = (
             LinkModel(congestion) if congestion is not None else None)
 
     def alloc(self, name: str, shape, dtype) -> Buffer:
         """Reserve a page-aligned DDR region for ``name``."""
+        if name in self.buffers:
+            raise ValueError(
+                f"buffer {name!r} already allocated at "
+                f"{self.buffers[name].addr:#x}; re-alloc would silently "
+                f"shadow it (free-list reuse is not modeled)")
         arr = np.zeros(shape, dtype)
         size = -(-arr.nbytes // self.PAGE) * self.PAGE
         buf = Buffer(name, self._next, arr)
@@ -77,7 +92,12 @@ class MemoryBridge:
     # Firmware-side access: plain numpy (paper: dereferencing C pointers).
     def host_write(self, name: str, data) -> None:
         buf = self.buffers[name]
-        np.copyto(buf.array, np.asarray(data, buf.array.dtype))
+        arr = np.asarray(data, buf.array.dtype)
+        if arr.shape != buf.array.shape:
+            raise ValueError(
+                f"host_write to {name!r}: data shape {arr.shape} != buffer "
+                f"shape {buf.array.shape} (refusing silent broadcast)")
+        np.copyto(buf.array, arr)
 
     def host_read(self, name: str) -> np.ndarray:
         return self.buffers[name].array.copy()
@@ -94,29 +114,48 @@ class MemoryBridge:
                             min(step, buf.nbytes - off), tag=tag)
                 for off in range(0, buf.nbytes, step)]
 
-    def dev_read(self, name: str, engine: str = "dma") -> np.ndarray:
-        """Accelerator-side read: transaction-logged, congestion-timed."""
-        buf = self.buffers[name]
+    def _submit(self, bursts: List[Transaction]) -> None:
+        """Route one burst batch through the link (or the fast path),
+        applying any fault-plan perturbation first."""
+        if self.fault_plan is not None:
+            bursts = self.fault_plan.perturb_bursts(bursts, self.log)
         if self.link is not None:
-            self.time = self.link.submit(
-                self._dev_bursts(buf, "read", engine, name), self.log)
-        else:
-            self.time += 1
-            self.log.log(Transaction(self.time, engine, "read", buf.addr,
-                                     buf.nbytes, tag=name))
-        return buf.array.copy()
+            self.time = self.link.submit(bursts, self.log)
+            return
+        for tx in bursts:
+            # logical clock; a delayed burst's min-issue time still holds
+            self.time = max(self.time + 1, tx.time)
+            tx.time = self.time
+            self.log.log(tx)
+
+    def dev_read(self, name: str, engine: str = "dma") -> np.ndarray:
+        """Accelerator-side read: transaction-logged, congestion-timed.
+
+        With a fault plan the returned data may suffer a transient bit
+        flip; the bridge detects it (ECC-style), audits the fault, and
+        re-issues the burst — the retry must heal, so firmware always sees
+        clean data while the protocol path is exercised.
+        """
+        buf = self.buffers[name]
+        self._submit(self._dev_bursts(buf, "read", engine, name))
+        data = buf.array.copy()
+        if (self.fault_plan is not None
+                and self.fault_plan.flip_read(data, name, self.log)):
+            # corrupted transfer detected against ECC: audited retry
+            self._submit(self._dev_bursts(buf, "read", engine, name))
+            data = buf.array.copy()
+        return data
 
     def dev_write(self, name: str, data, engine: str = "dma") -> None:
         """Accelerator-side write: transaction-logged, congestion-timed."""
         buf = self.buffers[name]
-        if self.link is not None:
-            self.time = self.link.submit(
-                self._dev_bursts(buf, "write", engine, name), self.log)
-        else:
-            self.time += 1
-            self.log.log(Transaction(self.time, engine, "write", buf.addr,
-                                     buf.nbytes, tag=name))
-        np.copyto(buf.array, np.asarray(data, buf.array.dtype))
+        arr = np.asarray(data, buf.array.dtype)
+        if arr.shape != buf.array.shape:
+            raise ValueError(
+                f"dev_write to {name!r}: data shape {arr.shape} != buffer "
+                f"shape {buf.array.shape} (refusing silent broadcast)")
+        self._submit(self._dev_bursts(buf, "write", engine, name))
+        np.copyto(buf.array, arr)
 
     def log_burst_list(self, txs: List[Tuple[str, str, int, int]],
                        base_time: Optional[float] = None) -> None:
@@ -129,14 +168,17 @@ class MemoryBridge:
         (Fig. 8) — and ``self.time`` advances to the batch makespan.
         """
         t = self.time if base_time is None else base_time
+        batch = [Transaction(t, engine, kind, addr, nbytes)
+                 for engine, kind, addr, nbytes in txs]
+        if self.fault_plan is not None:
+            batch = self.fault_plan.perturb_bursts(batch, self.log)
         if self.link is not None:
-            batch = [Transaction(t, engine, kind, addr, nbytes)
-                     for engine, kind, addr, nbytes in txs]
             self.time = self.link.submit(batch, self.log)
             return
-        for engine, kind, addr, nbytes in txs:
-            t += 1
-            self.log.log(Transaction(t, engine, kind, addr, nbytes))
+        for tx in batch:
+            t = max(t + 1, tx.time)
+            tx.time = t
+            self.log.log(tx)
         self.time = t
 
     def congestion_stats(self) -> Optional[CongestionResult]:
@@ -157,9 +199,11 @@ class FireBridge:
     BACKENDS = ("oracle", "interpret", "compiled")
 
     def __init__(self, name: str = "fb",
-                 congestion: Optional[CongestionConfig] = None) -> None:
+                 congestion: Optional[CongestionConfig] = None,
+                 fault_plan: Optional["FaultPlan"] = None) -> None:
         self.log = TransactionLog()
-        self.mem = MemoryBridge(self.log, congestion=congestion)
+        self.mem = MemoryBridge(self.log, congestion=congestion,
+                                fault_plan=fault_plan)
         self.csr = RegisterFile(f"{name}.csr", self.log)
         self._ops: Dict[str, Dict[str, Callable]] = {}
 
@@ -199,6 +243,11 @@ class FireBridge:
         outs = fns[backend](*args, **kw)
         if not isinstance(outs, (tuple, list)):
             outs = (outs,)
+        if len(outs) != len(out_bufs):
+            raise ValueError(
+                f"op {op!r} ({backend}) returned {len(outs)} output(s) but "
+                f"{len(out_bufs)} out_bufs were given ({out_bufs}); refusing "
+                f"to silently truncate the writeback")
         for name, o in zip(out_bufs, outs):
             self.mem.dev_write(name, np.asarray(o), engine=f"{engine}_wr")
 

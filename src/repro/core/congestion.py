@@ -59,6 +59,29 @@ class CongestionConfig:
     # routed through the online link (0 = never split).
     max_burst_bytes: int = 4096
 
+    def perturbed(self, rng: "np.random.Generator") -> "CongestionConfig":
+        """Seeded jitter of the link parameters — the fault plan's
+        ``congestion_perturb`` kind (core/fuzz.py).
+
+        Bandwidth/latency scale by [0.5, 2.0), DoS probability jitters
+        upward, burst granularity halves or doubles, and the DoS seed is
+        re-drawn.  Timing-only: functional DDR contents are unaffected, so
+        backend equivalence must survive any perturbation.
+        """
+        return dataclasses.replace(
+            self,
+            link_bytes_per_cycle=max(
+                1.0, self.link_bytes_per_cycle * float(rng.uniform(0.5, 2.0))),
+            base_latency=self.base_latency * float(rng.uniform(0.5, 2.0)),
+            dos_prob=float(np.clip(self.dos_prob + rng.uniform(0.0, 0.2),
+                                   0.0, 0.9)),
+            per_engine_issue_gap=self.per_engine_issue_gap
+            * float(rng.uniform(0.5, 2.0)),
+            max_burst_bytes=max(256, int(self.max_burst_bytes
+                                         * float(rng.choice([0.5, 1.0, 2.0])))),
+            seed=int(rng.integers(0, 2 ** 31)),
+        )
+
 
 @dataclasses.dataclass
 class CongestionResult:

@@ -29,6 +29,9 @@ class Register:
     access: str = RW
     reset: int = 0
     on_write: Optional[Callable[[int], None]] = None   # doorbell action
+    # invoked before each fb_read_32 returns, so hardware can refresh
+    # status bits the moment firmware looks at them (poll-driven devices)
+    on_read: Optional[Callable[[], None]] = None
 
 
 class RegisterFile:
@@ -43,12 +46,13 @@ class RegisterFile:
         self.time = 0.0
 
     def define(self, name: str, addr: int, access: str = RW, reset: int = 0,
-               on_write: Optional[Callable[[int], None]] = None) -> Register:
+               on_write: Optional[Callable[[int], None]] = None,
+               on_read: Optional[Callable[[], None]] = None) -> Register:
         if addr in self._by_addr:
             raise ValueError(f"register address collision at {addr:#x}")
         if addr % 4:
             raise ValueError(f"register {name} not 4-byte aligned: {addr:#x}")
-        reg = Register(name, addr, access, reset, on_write)
+        reg = Register(name, addr, access, reset, on_write, on_read)
         self._by_addr[addr] = reg
         self._val[addr] = reset & 0xFFFFFFFF
         return reg
@@ -67,6 +71,8 @@ class RegisterFile:
         if reg is None:
             self.log.violation(f"read from unmapped address {addr:#x}")
             return 0xDEADBEEF
+        if reg.on_read is not None:
+            reg.on_read()
         return self._val[addr]
 
     def fb_write_32(self, addr: int, data: int) -> None:
@@ -97,12 +103,21 @@ class RegisterFile:
         return self._val[self.addr_of(name)]
 
     def poll(self, name: str, mask: int, value: int,
-             max_reads: int = 10_000) -> int:
-        """Poll a status register until (reg & mask) == value.  Returns the
-        number of polls; records a violation on timeout."""
+             max_reads: int = 10_000, strict: bool = False) -> int:
+        """Poll a status register until (reg & mask) == value.
+
+        Returns the number of reads on success.  On timeout a violation is
+        recorded and -1 is returned — distinguishable from a success on the
+        final read, which returns ``max_reads`` — or, with ``strict=True``,
+        ``TimeoutError`` is raised instead.
+        """
         addr = self.addr_of(name)
         for n in range(1, max_reads + 1):
             if (self.fb_read_32(addr) & mask) == value:
                 return n
         self.log.violation(f"poll timeout on {name} mask={mask:#x}")
-        return max_reads
+        if strict:
+            raise TimeoutError(
+                f"poll timeout on {name} mask={mask:#x} value={value:#x} "
+                f"after {max_reads} reads")
+        return -1

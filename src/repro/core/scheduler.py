@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.bridge import FireBridge
 from repro.core.congestion import CongestionConfig, CongestionResult
 from repro.core.equivalence import EquivalenceReport, compare_outputs
+from repro.core.fuzz import FaultEvent, FaultPlan
 
 
 def _config_key(config: Dict[str, Any]) -> Tuple:
@@ -49,11 +50,16 @@ class SweepCell:
     Cells sharing ``(op, config)`` across different backends form one
     equivalence group — the paper's golden-model / RTL-sim / deployment
     triangle (Fig. 1) evaluated at one design point.
+
+    ``fault_plan`` is the randomized-stimulus sweep axis (core/fuzz.py):
+    when set, the cell's bridge runs fault-injected — each cell forks its
+    own deterministic child plan, so concurrent cells reproduce exactly.
     """
     op: str
     backend: str
     config: Dict[str, Any] = dataclasses.field(default_factory=dict)
     congestion: Optional[CongestionConfig] = None
+    fault_plan: Optional[FaultPlan] = None
 
     @property
     def label(self) -> str:
@@ -71,6 +77,7 @@ class CellResult:
     congestion: Optional[CongestionResult]
     violations: List[str]
     error: Optional[str] = None
+    faults: List[FaultEvent] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -133,9 +140,11 @@ class CoVerifySession:
     """
 
     def __init__(self, firmware: Callable[..., None],
-                 congestion: Optional[CongestionConfig] = None) -> None:
+                 congestion: Optional[CongestionConfig] = None,
+                 fault_plan: Optional[FaultPlan] = None) -> None:
         self.firmware = firmware
         self.congestion = congestion
+        self.fault_plan = fault_plan
         self._ops: Dict[str, Dict[str, Any]] = {}
         self.cells: List[SweepCell] = []
 
@@ -151,12 +160,14 @@ class CoVerifySession:
 
     def add_cell(self, op: str, backend: str,
                  config: Optional[Dict[str, Any]] = None,
-                 congestion: Optional[CongestionConfig] = None) -> SweepCell:
+                 congestion: Optional[CongestionConfig] = None,
+                 fault_plan: Optional[FaultPlan] = None) -> SweepCell:
         """Append one ``(op, backend, config)`` cell to the sweep."""
         if op not in self._ops:
             raise KeyError(f"op {op!r} not registered")
         cell = SweepCell(op, backend, dict(config or {}),
-                         congestion or self.congestion)
+                         congestion or self.congestion,
+                         fault_plan or self.fault_plan)
         self.cells.append(cell)
         return cell
 
@@ -168,7 +179,11 @@ class CoVerifySession:
 
     # ----------------------------------------------------------- execute
     def _run_cell(self, cell: SweepCell) -> CellResult:
-        fb = FireBridge(congestion=cell.congestion)
+        # each cell forks its own child plan keyed by the cell label, so
+        # thread-pool scheduling order cannot perturb the fault stream
+        plan = (cell.fault_plan.fork(cell.label)
+                if cell.fault_plan is not None else None)
+        fb = FireBridge(congestion=cell.congestion, fault_plan=plan)
         fb.register_op(cell.op, **self._ops[cell.op])
         t0 = time.perf_counter()
         err: Optional[str] = None
@@ -185,6 +200,7 @@ class CoVerifySession:
             congestion=fb.congestion_stats(),
             violations=list(fb.log.violations),
             error=err,
+            faults=list(plan.events) if plan is not None else [],
         )
 
     def run(self, max_workers: Optional[int] = None,

@@ -27,9 +27,21 @@ class Transaction:
 
 
 class TransactionLog:
+    """Burst log + two audit channels.
+
+    ``violations`` records protocol breaches observed by the hardware side
+    (unmapped access, RO write, doorbell-while-busy, ...).  ``faults``
+    records *deliberately injected* perturbations from a fault plan
+    (core/fuzz.py) — delayed/reordered/split bursts, healed bit flips,
+    congestion perturbation.  Keeping the channels separate lets the fuzz
+    harness assert that every injected fault was audited without the
+    injection itself failing a sweep's ``passed`` check.
+    """
+
     def __init__(self) -> None:
         self.txs: List[Transaction] = []
         self.violations: List[str] = []
+        self.faults: List[str] = []
 
     def log(self, tx: Transaction) -> None:
         self.txs.append(tx)
@@ -39,6 +51,14 @@ class TransactionLog:
 
     def violation(self, msg: str) -> None:
         self.violations.append(msg)
+
+    def fault(self, msg: str) -> None:
+        """Audit one injected fault (never silently absorbed)."""
+        self.faults.append(msg)
+
+    def audit(self) -> Dict[str, int]:
+        """Counts for the violation/fault audit channels."""
+        return {"violations": len(self.violations), "faults": len(self.faults)}
 
     # ------------------------------------------------------------ queries
     def total_bytes(self, engine: Optional[str] = None) -> int:

@@ -49,25 +49,36 @@ class ServingEngine:
                  flags: RunFlags = RunFlags(microbatches=1),
                  ctx: Optional[ShardCtx] = None,
                  prompt_pad: int = 16,
-                 congestion: Optional[CongestionConfig] = None):
+                 congestion: Optional[CongestionConfig] = None,
+                 fault_plan=None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.flags = flags
         self.prompt_pad = prompt_pad
+        self.congestion = congestion
 
         self._prefill = jax.jit(make_prefill_fn(cfg, flags, ctx, max_len))
         self._decode = jax.jit(make_decode_fn(cfg, flags, ctx))
-        self.cache = init_cache(cfg, max_slots, max_len)
-        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.reset(fault_plan=fault_plan)
+
+    def reset(self, fault_plan=None) -> None:
+        """Restore fresh-engine state (cache, slots, queues, control plane)
+        while keeping the jitted prefill/decode executables — used by the
+        fuzz harness (core/fuzz.py) to run many randomized submit streams
+        at warm-cache cost.  ``fault_plan`` routes the engine's prompt/
+        token DMA through bridge-level fault injection."""
+        self.cache = init_cache(self.cfg, self.max_slots, self.max_len)
+        self.slots: List[Optional[Request]] = [None] * self.max_slots
         self.pending: deque[Request] = deque()
         self.requests: Dict[int, Request] = {}
         self.completed = 0
 
         # control plane; with `congestion` the prompt/token DMA traffic is
         # arbitrated online through the shared-link model (paper §IV-C)
-        self.mem = MemoryBridge(congestion=congestion)
+        self.mem = MemoryBridge(congestion=self.congestion,
+                                fault_plan=fault_plan)
         self.csr = RegisterFile("serve.csr", self.mem.log)
         self.csr.define("CTRL", CTRL)
         self.csr.define("STATUS", STATUS, access=RO)
@@ -77,8 +88,9 @@ class ServingEngine:
         self.csr.define("SUBMIT_MAXNEW", SUBMIT_MAXNEW)
         self.csr.define("COMPLETED", COMPLETED, access=RO)
         self.csr.define("ACTIVE", ACTIVE, access=RO)
-        self.mem.alloc("prompt_in", (max_len,), np.int32)
-        self.mem.alloc("tokens_out", (max_slots, max_len), np.int32)
+        self.mem.alloc("prompt_in", (self.max_len,), np.int32)
+        self.mem.alloc("tokens_out", (self.max_slots, self.max_len),
+                       np.int32)
 
     # -------------------------------------------------- register protocol
     def _on_doorbell(self, _data: int) -> None:
@@ -93,6 +105,31 @@ class ServingEngine:
 
     # ---------------------------------------------------------- scheduler
     def submit(self, req: Request) -> None:
+        """Enqueue one request; rejects (with a logged violation, never a
+        silent overwrite) non-positive token budgets and duplicate ids."""
+        if req.max_new_tokens <= 0:
+            self.csr.log.violation(
+                f"SUBMIT_MAXNEW must be positive: {req.max_new_tokens} "
+                f"(request {req.rid})")
+            return
+        # ids may be recycled once their request retired (bounded-width
+        # SUBMIT_ID CSR); only an in-flight duplicate is a violation
+        existing = self.requests.get(req.rid)
+        if existing is not None and not existing.done:
+            self.csr.log.violation(
+                f"duplicate SUBMIT_ID {req.rid}: request still in flight")
+            return
+        # KV-cache capacity: prefill occupies the padded prompt bucket and
+        # each decode step appends one entry — past max_len the cache
+        # scatter would be silently dropped and generations corrupted
+        pl = self._pad_len(len(req.prompt))
+        if (len(req.prompt) > self.max_len
+                or pl + req.max_new_tokens - 1 > self.max_len):
+            self.csr.log.violation(
+                f"request {req.rid} exceeds KV capacity: padded prompt "
+                f"{pl} + {req.max_new_tokens} new tokens > max_len "
+                f"{self.max_len}")
+            return
         self.pending.append(req)
         self.requests[req.rid] = req
 
@@ -130,7 +167,11 @@ class ServingEngine:
             self.slots[slot] = req
             first = int(jnp.argmax(logits[0]))
             req.out_tokens.append(first)
-            self.csr.hw_set("ACTIVE", sum(s is not None for s in self.slots))
+            # the prefill itself emits one token: a max_new_tokens=1
+            # request is complete right here, not after a decode step
+            if len(req.out_tokens) >= req.max_new_tokens:
+                self._retire(slot)
+            self.csr.hw_set("ACTIVE", self._n_active())
             return self._n_active()
 
         if self._n_active():
@@ -146,19 +187,25 @@ class ServingEngine:
                     continue
                 s.out_tokens.append(int(nxt[i]))
                 if len(s.out_tokens) >= s.max_new_tokens:
-                    s.done = True
-                    # row-sized DMA writeback: only slot i's tokens move
-                    buf = self.mem.buffers["tokens_out"]
-                    buf.array[i, :len(s.out_tokens)] = s.out_tokens
-                    row = buf.array[i]
-                    self.mem.log_burst_list(
-                        [("serve_dma", "write",
-                          buf.addr + i * row.nbytes, row.nbytes)])
-                    self.slots[i] = None
-                    self.completed += 1
-                    self.csr.hw_set("COMPLETED", self.completed)
+                    self._retire(i)
             self.csr.hw_set("ACTIVE", self._n_active())
         return self._n_active()
+
+    def _retire(self, i: int) -> None:
+        """Complete slot i: tokens_out DMA writeback, slot free,
+        COMPLETED CSR update (shared by the prefill and decode paths)."""
+        s = self.slots[i]
+        s.done = True
+        # row-sized DMA writeback: only slot i's tokens move
+        buf = self.mem.buffers["tokens_out"]
+        buf.array[i, :len(s.out_tokens)] = s.out_tokens
+        row = buf.array[i]
+        self.mem.log_burst_list(
+            [("serve_dma", "write",
+              buf.addr + i * row.nbytes, row.nbytes)])
+        self.slots[i] = None
+        self.completed += 1
+        self.csr.hw_set("COMPLETED", self.completed)
 
     def _batchify(self, batch):
         if self.cfg.frontend == "tokens+patches":

@@ -188,6 +188,67 @@ def test_congestion_disabled_fast_path():
     assert all(t.stall == 0.0 for t in fb.log.txs)
 
 
+def test_launch_rejects_output_count_mismatch():
+    """An op returning fewer/more outputs than out_bufs raises instead of
+    silently truncating the writeback."""
+    fb = FireBridge()
+    fb.register_op("two", oracle=lambda a: (a, a))
+    fb.mem.alloc("x", (4,), np.float32)
+    fb.mem.alloc("y", (4,), np.float32)
+    fb.mem.alloc("z", (4,), np.float32)
+    import pytest
+    with pytest.raises(ValueError, match="two.*2 output"):
+        fb.launch("two", "oracle", ["x"], ["y"])          # too many
+    with pytest.raises(ValueError, match="2 output"):
+        fb.launch("two", "oracle", ["x"], ["y", "z", "x"])  # too few
+
+
+def test_alloc_rejects_silent_shadowing():
+    import pytest
+    fb = FireBridge()
+    fb.mem.alloc("x", (4,), np.float32)
+    with pytest.raises(ValueError, match="already allocated"):
+        fb.mem.alloc("x", (8,), np.float32)
+
+
+def test_host_and_dev_write_reject_shape_broadcast():
+    import pytest
+    fb = FireBridge()
+    fb.mem.alloc("x", (4, 4), np.float32)
+    with pytest.raises(ValueError, match="refusing silent broadcast"):
+        fb.mem.host_write("x", np.zeros((4,), np.float32))
+    with pytest.raises(ValueError, match="refusing silent broadcast"):
+        fb.mem.dev_write("x", np.zeros((2, 4), np.float32))
+    fb.mem.host_write("x", np.ones((4, 4), np.int32))     # cast still fine
+    assert fb.mem.host_read("x").sum() == 16
+
+
+def test_poll_timeout_distinguishable_from_success():
+    import pytest
+    from repro.core.registers import RegisterFile
+    rf = RegisterFile()
+    rf.define("STATUS", 0x0, access="ro")
+    rf.hw_set("STATUS", 1)
+    n = rf.poll("STATUS", 1, 1, max_reads=3)
+    assert n == 1                       # success on first read
+    assert rf.poll("STATUS", 1, 0, max_reads=3) == -1   # timeout
+    assert any("poll timeout" in v for v in rf.log.violations)
+    with pytest.raises(TimeoutError):
+        rf.poll("STATUS", 1, 0, max_reads=3, strict=True)
+
+
+def test_register_on_read_refreshes_status():
+    from repro.core.registers import RegisterFile
+    rf = RegisterFile()
+    state = {"n": 0}
+
+    def refresh():
+        state["n"] += 1
+        rf.hw_set("STATUS", 1 if state["n"] >= 3 else 0)
+    rf.define("STATUS", 0x0, access="ro", on_read=refresh)
+    assert rf.poll("STATUS", 1, 1, max_reads=10) == 3
+
+
 def test_heatmap_and_timeline_shapes():
     log = TransactionLog()
     for i in range(100):

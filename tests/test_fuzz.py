@@ -1,0 +1,158 @@
+"""Randomized fault-injection harness (core/fuzz.py): seeded
+reproducibility, per-layer audit accounting, differential checking under
+faults, sweep-axis wiring, and trace shrinking."""
+import numpy as np
+import pytest
+
+from repro.core import (CongestionConfig, CoVerifySession, FaultPlan,
+                        FireBridge, ProtocolFuzzer)
+from repro.kernels.systolic_matmul.sweep import (matmul_backends,
+                                                 matmul_firmware)
+
+
+def test_same_seed_identical_fault_trace_and_log():
+    """Same seed => identical fault trace, violations, and TransactionLog
+    digest across independent fuzzer instances."""
+    r1 = ProtocolFuzzer(seed=7, layers=("bridge", "registers")).run(12)
+    r2 = ProtocolFuzzer(seed=7, layers=("bridge", "registers")).run(12)
+    assert r1.passed and r2.passed
+    assert r1.digest == r2.digest
+    for a, b in zip(r1.results, r2.results):
+        assert [e.key() for e in a.faults] == [e.key() for e in b.faults]
+        assert a.violations == b.violations
+
+
+def test_different_seed_different_trace():
+    r1 = ProtocolFuzzer(seed=1, layers=("registers",)).run(10)
+    r2 = ProtocolFuzzer(seed=2, layers=("registers",)).run(10)
+    assert r1.digest != r2.digest
+
+
+def test_bridge_faults_injected_audited_and_healed():
+    """Bridge scenarios inject DMA/bit-flip faults, every one lands in the
+    fault audit, and the three backends still agree on final DDR state."""
+    r = ProtocolFuzzer(seed=0, layers=("bridge",)).run(6)
+    assert r.passed
+    kinds = r.fault_counts()
+    assert kinds.get("bitflip_read", 0) > 0
+    assert kinds.get("dma_reorder", 0) > 0
+    assert kinds.get("dma_delay", 0) > 0
+    assert kinds.get("dma_split", 0) > 0
+    assert kinds.get("congestion_perturb", 0) > 0
+
+
+def test_register_storm_matches_shadow_model():
+    """Illegal-access storms, W1C edges, doorbell-while-busy races and
+    poll timeouts: the device must match the golden shadow on every read
+    value and every violation message."""
+    r = ProtocolFuzzer(seed=11, layers=("registers",)).run(25)
+    assert r.passed
+    kinds = r.fault_counts()
+    for k in ("illegal_read", "illegal_write", "ro_write"):
+        assert kinds.get(k, 0) > 0, f"storm never exercised {k}"
+    assert kinds.get("doorbell_busy", 0) > 0
+    assert kinds.get("poll_timeout", 0) > 0
+    # every injected violation is audited: scenario counts line up
+    for res in r.results:
+        predicted = [e for e in res.faults
+                     if e.kind in ("illegal_read", "illegal_write",
+                                   "ro_write", "doorbell_busy",
+                                   "poll_timeout")]
+        assert len(res.violations) == len(predicted)
+
+
+def test_fuzz_detects_planted_backend_bug_and_shrinks():
+    """A buggy interpret backend fails the differential check, and shrink
+    reduces the scenario to its shortest failing op prefix."""
+    from repro.core.fuzz import planted_bug_table
+    fz = ProtocolFuzzer(seed=0, layers=("bridge",),
+                        mm_table=planted_bug_table())
+    report = fz.run(3)
+    assert not report.passed
+    fail = report.failures()[0]
+    assert any("divergence" in f for f in fail.failures)
+    scn = fz.scenario(fail.index)
+    sub, res = fz.shrink(scn)
+    assert not res.ok
+    assert len(sub.ops) == 1          # one launch suffices to reproduce
+    assert sub.ops == scn.ops[:len(sub.ops)]
+
+
+def test_fault_plan_fork_is_stateless_and_deterministic():
+    plan = FaultPlan(seed=42)
+    a1 = plan.fork("cell0").rng.integers(0, 1 << 30, 8)
+    # consuming parent entropy must not change what a fork derives
+    plan.rng.random(100)
+    a2 = plan.fork("cell0").rng.integers(0, 1 << 30, 8)
+    b = plan.fork("cell1").rng.integers(0, 1 << 30, 8)
+    np.testing.assert_array_equal(a1, a2)
+    assert not np.array_equal(a1, b)
+
+
+def test_bitflip_read_heals_and_audits():
+    """A forced bit flip on dev_read is healed by the audited retry: the
+    caller sees clean data, the log sees the fault + the retry burst."""
+    plan = FaultPlan(seed=0, rates={"bitflip_read": 1.0, "dma_delay": 0.0,
+                                    "dma_reorder": 0.0, "dma_split": 0.0,
+                                    "congestion_perturb": 0.0})
+    fb = FireBridge(fault_plan=plan)
+    fb.mem.alloc("x", (16,), np.float32)
+    fb.mem.host_write("x", np.arange(16, dtype=np.float32))
+    data = fb.mem.dev_read("x")
+    np.testing.assert_array_equal(data, np.arange(16, dtype=np.float32))
+    assert len(fb.log.faults) == 1 and "bitflip" in fb.log.faults[0]
+    assert len(fb.log.txs) == 2       # original burst + audited retry
+    assert [e.kind for e in plan.events] == ["bitflip_read"]
+
+
+def test_scheduler_fault_plan_sweep_axis():
+    """CoVerifySession cells run fault-injected when the session carries a
+    FaultPlan; faults are audited per cell and equivalence still holds."""
+    rates = {"bitflip_read": 1.0, "dma_delay": 1.0, "dma_reorder": 1.0,
+             "dma_split": 1.0, "congestion_perturb": 1.0}
+    sess = CoVerifySession(matmul_firmware,
+                           congestion=CongestionConfig(seed=1),
+                           fault_plan=FaultPlan(seed=5, rates=rates))
+    sess.register_op("mm", **matmul_backends(jit=False))
+    sess.add_sweep("mm", ("oracle", "interpret"), [{"size": 32}])
+    report = sess.run(max_workers=2)
+    assert report.passed               # faults perturb timing, not function
+    assert all(r.faults for r in report.cells)
+    rerun = sess.run(max_workers=2)
+    for a, b in zip(report.cells, rerun.cells):
+        assert [e.key() for e in a.faults] == [e.key() for e in b.faults]
+
+
+def test_bench_fuzz_quick_mode():
+    """The throughput benchmark's quick mode stays smoke-lane fast and
+    reports passing scenario rows."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.bench_fuzz import run
+    rows = run(quick=True)
+    assert rows[0].startswith("case,layer")
+    assert len(rows) >= 3
+    assert all(r.endswith("True") for r in rows[1:])
+
+
+@pytest.fixture(scope="module")
+def serving_fuzzer():
+    return ProtocolFuzzer(seed=9, layers=("serving",))
+
+
+def test_serving_fuzz_randomized_submit_streams(serving_fuzzer):
+    """Randomized submit order, duplicate ids, zero/max max_new_tokens and
+    pad-straddling prompts: every accepted request emits exactly its token
+    budget, every rejection is a predicted violation, same seed => same
+    transaction log."""
+    r1 = serving_fuzzer.run(8)
+    assert r1.passed, r1.summary()["failures"]
+    kinds = r1.fault_counts()
+    assert kinds.get("zero_maxnew", 0) > 0
+    assert kinds.get("dup_rid", 0) > 0
+    assert kinds.get("bad_len", 0) > 0
+    assert kinds.get("over_budget", 0) > 0
+    assert kinds.get("max_maxnew", 0) > 0
+    r2 = serving_fuzzer.run(8)
+    assert r1.digest == r2.digest

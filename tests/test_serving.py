@@ -59,6 +59,76 @@ def test_continuous_batching_oversubscription():
     assert eng.completed == 4
 
 
+def test_max_new_tokens_respected_on_prefill_path():
+    """A max_new_tokens=1 request completes at prefill with exactly one
+    token (the old path emitted two), frees its slot immediately, and
+    writes tokens_out."""
+    cfg, eng = _engine(max_slots=2)
+    rng = np.random.default_rng(3)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size, 8)
+                       .astype(np.int32), 1))
+    eng.step()
+    r = eng.requests[0]
+    assert r.done and len(r.out_tokens) == 1
+    assert eng.completed == 1 and eng._n_active() == 0
+    assert eng.csr.hw_get("COMPLETED") == 1
+    assert eng.mem.buffers["tokens_out"].array[0, 0] == r.out_tokens[0]
+
+
+def test_zero_max_new_tokens_rejected_with_violation():
+    cfg, eng = _engine()
+    rng = np.random.default_rng(4)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size, 8)
+                       .astype(np.int32), 0))
+    assert 0 not in eng.requests and not eng.pending
+    assert any("SUBMIT_MAXNEW" in v for v in eng.csr.log.violations)
+    # same rejection over the CSR doorbell path
+    eng.mem.buffers["prompt_in"].array[:4] = \
+        rng.integers(0, cfg.vocab_size, 4)
+    eng.csr.fb_write_32(0x0C, 1)
+    eng.csr.fb_write_32(0x10, 4)
+    eng.csr.fb_write_32(0x14, 0)
+    eng.csr.fb_write_32(0x08, 1)
+    assert 1 not in eng.requests
+    eng.run_until_done()
+    assert eng.completed == 0
+
+
+def test_duplicate_submit_id_is_violation_not_overwrite():
+    cfg, eng = _engine()
+    rng = np.random.default_rng(5)
+    first = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng.submit(Request(7, first, 3))
+    eng.submit(Request(7, rng.integers(0, cfg.vocab_size, 8)
+                       .astype(np.int32), 9))
+    assert any("duplicate SUBMIT_ID 7" in v for v in eng.csr.log.violations)
+    assert np.array_equal(eng.requests[7].prompt, first)
+    assert eng.requests[7].max_new_tokens == 3    # first submission wins
+    eng.run_until_done()
+    assert eng.completed == 1 and len(eng.requests[7].out_tokens) == 3
+    # a retired id may be recycled (bounded-width SUBMIT_ID CSR)
+    n_viol = len(eng.csr.log.violations)
+    eng.submit(Request(7, first, 2))
+    assert len(eng.csr.log.violations) == n_viol
+    eng.run_until_done()
+    assert eng.completed == 2 and len(eng.requests[7].out_tokens) == 2
+
+
+def test_requests_exceeding_kv_capacity_rejected():
+    """prompt-bucket + max_new_tokens past max_len would silently drop KV
+    writes; the doorbell rejects it with a violation instead."""
+    cfg, eng = _engine()            # max_len=64, prompt_pad=16
+    rng = np.random.default_rng(6)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size, 8)
+                       .astype(np.int32), 64))   # 16 + 63 > 64
+    assert 0 not in eng.requests
+    assert any("exceeds KV capacity" in v for v in eng.csr.log.violations)
+    # the largest budget that fits is accepted
+    eng.submit(Request(1, rng.integers(0, cfg.vocab_size, 8)
+                       .astype(np.int32), 64 - 16 + 1))
+    assert 1 in eng.requests
+
+
 @pytest.mark.slow
 def test_decode_matches_unbatched_prefill():
     """A slot's generation is independent of other slots (cache isolation)."""
