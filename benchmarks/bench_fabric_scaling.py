@@ -1,0 +1,76 @@
+"""Fabric scaling: the multi-device co-verification sweep at 1/2/4
+devices (core/fabric.py; the FireSim-style scale-out lane).
+
+For each device count the same systolic-matmul cell runs sharded across a
+FabricCluster through the CoVerifySession ``devices=`` axis, reporting
+
+* modeled fabric cycles (scatter/broadcast/launch/gather through the
+  per-port links + shared host channel, congestion-arbitrated),
+* modeled link stall cycles (the Fig. 8 series, now inter-device), and
+* wall-clock seconds per cell,
+
+with the gathered result equivalence-checked against the single-device
+run (bit-identical by construction — reduction axes are never split).
+Full mode adds the head-sharded flash-attention op.
+
+    PYTHONPATH=src:. python benchmarks/bench_fabric_scaling.py [--full]
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import FABRIC_LINK, CoVerifySession
+
+DEVICES = (1, 2, 4)
+LINK = FABRIC_LINK
+MM_SIZE = 128
+FA_CFG = {"batch": 1, "heads": 8, "seq": 64, "dim": 16}
+
+
+def _sweep(op, firmware, fabric_firmware, backends, table, config):
+    sess = CoVerifySession(firmware, fabric_firmware=fabric_firmware,
+                           link_config=LINK)
+    sess.register_op(op, **table)
+    sess.add_sweep(op, backends, [config], devices=DEVICES)
+    return sess.run(max_workers=4)
+
+
+def run(quick: bool = True) -> list[str]:
+    from repro.kernels.flash_attention import sweep as fa_sweep
+    from repro.kernels.systolic_matmul import sweep as mm_sweep
+
+    rows = ["case,op,backend,devices,bridge_cycles,link_stall_cycles,"
+            "wall_s,equivalent"]
+    jobs = [("mm", mm_sweep.matmul_firmware,
+             mm_sweep.matmul_fabric_firmware,
+             ("oracle", "compiled") if quick else ("oracle", "interpret",
+                                                   "compiled"),
+             mm_sweep.matmul_backends(tile=32), {"size": MM_SIZE})]
+    if not quick:
+        jobs.append(("fa", fa_sweep.flash_firmware,
+                     fa_sweep.flash_fabric_firmware,
+                     ("oracle", "interpret"),
+                     fa_sweep.flash_backends(), FA_CFG))
+    for op, fw, ffw, backends, table, config in jobs:
+        report = _sweep(op, fw, ffw, backends, table, config)
+        assert report.passed, report.summary()
+        for r in sorted(report.cells, key=lambda r: (r.cell.backend,
+                                                     r.cell.devices)):
+            if r.cell.devices > 1:
+                assert r.link_stall > 0, \
+                    f"no modeled link stalls at {r.cell.label}"
+            rows.append(f"fabric,{op},{r.cell.backend},{r.cell.devices},"
+                        f"{r.bridge_time:.0f},{r.link_stall:.0f},"
+                        f"{r.seconds:.3f},{report.passed}")
+    return rows
+
+
+def run_full() -> list[str]:
+    return run(quick=False)
+
+
+if __name__ == "__main__":
+    print("\n".join(run(quick="--full" not in sys.argv[1:])))

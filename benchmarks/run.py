@@ -31,8 +31,8 @@ def _run(name: str, fn) -> list[str]:
 
 def main() -> None:
     from benchmarks import (bench_access_patterns, bench_bandwidth_profile,
-                            bench_debug_iteration, bench_fuzz,
-                            bench_hls4ml_scaling)
+                            bench_debug_iteration, bench_fabric_scaling,
+                            bench_fuzz, bench_hls4ml_scaling)
     from benchmarks import roofline as roofline_mod
 
     print("name,us_per_call,derived")
@@ -42,6 +42,7 @@ def main() -> None:
     _run("fig8_bandwidth_profile", bench_bandwidth_profile.run)
     _run("fig9_access_patterns", bench_access_patterns.run)
     _run("fuzz_throughput", bench_fuzz.run)         # quick mode
+    _run("fabric_scaling", bench_fabric_scaling.run)  # quick mode
 
     def _roofline():
         recs = roofline_mod.load("baseline")

@@ -40,6 +40,9 @@ def main():
                     help="plant a known interpret-backend bug (demo)")
     ap.add_argument("--skip-repro-check", action="store_true",
                     help="skip the same-seed second pass")
+    ap.add_argument("--coverage-report", default=None, metavar="PATH",
+                    help="write the functional-coverage bin report "
+                         "(core/coverage.py) to this file")
     args = ap.parse_args()
 
     layers = tuple(s for s in args.layers.split(",") if s)
@@ -59,7 +62,21 @@ def main():
     print(f"  violations audited: {s['violations_audited']}   "
           f"transactions logged: {s['transactions']}")
     print(f"  transaction-log digest: {report.digest[:16]}")
+    # functional coverage: the acceptance gate is 100% of the protocol
+    # bins; the report names every hole it finds
+    groups = ["protocol", "burst_size", "congestion", "fault_kind"]
+    if "serving" in layers:
+        groups.append("serving")
+    cov_text = report.coverage.report(groups=groups)
+    print("  " + cov_text.replace("\n", "\n  "))
+    if args.coverage_report:
+        Path(args.coverage_report).write_text(
+            report.coverage.report() + "\n")
+        print(f"  coverage report written to {args.coverage_report}")
     print(f"  result: {'PASS' if report.passed else 'FAIL'}")
+    if not report.coverage.covered("protocol"):
+        print(f"  WARNING: uncovered protocol bins: "
+              f"{report.coverage.holes('protocol')}")
 
     if not report.passed:
         for r in report.failures()[:4]:

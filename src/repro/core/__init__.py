@@ -8,6 +8,11 @@
   equivalence   — oracle ≡ interpret ≡ compiled checking w/ localization
   coverify      — one-call co-verification driver (debug-iteration unit)
   scheduler     — batched multi-backend sweep scheduler (Fig. 5 at scale)
+  fabric        — multi-device cluster with modeled interconnect: per-port
+                  links + shared host channel, sharded launches, ring
+                  all_reduce (FireSim-style scale-out)
+  coverage      — functional-coverage bins over protocol/burst/congestion/
+                  fault/fabric stimulus, fed by fuzz + fabric
   fuzz          — seeded fault injection + randomized protocol stimulus
                   with differential checking and trace shrinking
   hlo_profiler  — compiled-HLO transaction extraction + roofline terms
@@ -15,9 +20,11 @@
 from repro.core.bridge import Buffer, FireBridge, MemoryBridge
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel, simulate)
+from repro.core.coverage import CoverageModel
 from repro.core.coverify import CoverifyResult, coverify
 from repro.core.equivalence import (EquivalenceReport, check_equivalence,
                                     compare_outputs)
+from repro.core.fabric import FABRIC_LINK, FabricCluster, sharded_launch
 from repro.core.fuzz import (FaultEvent, FaultPlan, FuzzReport,
                              ProtocolFuzzer, run_fuzz)
 from repro.core.registers import DOORBELL, RO, RW, W1C, RegisterFile
@@ -27,8 +34,9 @@ from repro.core.transactions import Transaction, TransactionLog
 
 __all__ = [
     "Buffer", "FireBridge", "MemoryBridge", "CongestionConfig",
-    "CongestionResult", "LinkModel", "simulate", "CoverifyResult",
-    "coverify", "EquivalenceReport", "check_equivalence", "compare_outputs",
+    "CongestionResult", "LinkModel", "simulate", "CoverageModel",
+    "CoverifyResult", "coverify", "EquivalenceReport", "check_equivalence",
+    "compare_outputs", "FABRIC_LINK", "FabricCluster", "sharded_launch",
     "FaultEvent", "FaultPlan", "FuzzReport", "ProtocolFuzzer", "run_fuzz",
     "RegisterFile", "RO", "RW", "W1C", "DOORBELL", "CellResult",
     "CoVerifySession", "SweepCell", "SweepReport", "run_sequential",

@@ -33,7 +33,8 @@ import numpy as np
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
 from repro.core.registers import RegisterFile
-from repro.core.transactions import Transaction, TransactionLog
+from repro.core.transactions import (Transaction, TransactionLog,
+                                     split_bursts)
 
 
 @dataclasses.dataclass
@@ -107,12 +108,8 @@ class MemoryBridge:
                     tag: str) -> List[Transaction]:
         """Split one device transfer into link-level bursts (§IV-C)."""
         step = self.congestion.max_burst_bytes if self.congestion else 0
-        if step <= 0 or buf.nbytes <= step:
-            return [Transaction(self.time, engine, kind, buf.addr,
-                                buf.nbytes, tag=tag)]
-        return [Transaction(self.time, engine, kind, buf.addr + off,
-                            min(step, buf.nbytes - off), tag=tag)
-                for off in range(0, buf.nbytes, step)]
+        return split_bursts(self.time, engine, kind, buf.addr, buf.nbytes,
+                            tag, step)
 
     def _submit(self, bursts: List[Transaction]) -> None:
         """Route one burst batch through the link (or the fast path),
@@ -201,6 +198,7 @@ class FireBridge:
     def __init__(self, name: str = "fb",
                  congestion: Optional[CongestionConfig] = None,
                  fault_plan: Optional["FaultPlan"] = None) -> None:
+        self.name = name
         self.log = TransactionLog()
         self.mem = MemoryBridge(self.log, congestion=congestion,
                                 fault_plan=fault_plan)

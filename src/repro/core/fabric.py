@@ -1,0 +1,462 @@
+"""Multi-device co-verification fabric (paper §IV-C scaled out).
+
+The paper's end state is verifying firmware that orchestrates *several*
+subsystems over a shared memory fabric; FireSim showed the same move for
+cycle-accurate simulation — many simulated nodes joined by a *modeled*
+network.  ``FabricCluster`` is that shape here: N independent
+``FireBridge`` devices (each with its own DDR, CSR space, transaction log,
+and optionally its own online congestion link and forked fault plan)
+joined by a modeled interconnect built from ``core/congestion.py``
+pieces:
+
+* one ``LinkModel`` per device **port** (the device's bidirectional fabric
+  attachment — transfers from and to the device contend on it, the way tx
+  and rx DMA contend on a NIC), and
+* one shared **host↔fabric DMA channel** that every scatter/gather and
+  cluster-serving token writeback must cross.
+
+Every fabric transfer — ``dev_copy``, ``scatter``/``broadcast``/
+``gather`` of sharded buffers, and the ring ``all_reduce`` collective —
+is split into link-level bursts, arbitrated through the port models
+(advancing the fabric clock and accumulating per-link stall statistics),
+logged in the fabric ``TransactionLog``, and routed through a forked
+fault plan when one is installed.  Same seed ⇒ identical fabric + device
+transaction streams, witnessed by ``digest()``.
+
+``sharded_launch`` runs one accelerator op sharded across the cluster
+using the ``sharding/specs.py`` fabric layouts (scatter the sharded
+inputs, broadcast the replicated ones, device-local launches, gather the
+output) — the gathered result is bit-identical to the single-device run
+because the layouts never split a reduction axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bridge import FireBridge, MemoryBridge
+from repro.core.congestion import (CongestionConfig, CongestionResult,
+                                   LinkModel)
+from repro.core.transactions import (Transaction, TransactionLog,
+                                     split_bursts)
+
+# Default fabric-link parameters: an inter-device serdes link is narrower
+# and longer-latency than the device-local DDR interface modeled by the
+# bridge's own CongestionConfig defaults.
+FABRIC_LINK = CongestionConfig(link_bytes_per_cycle=64.0, base_latency=100.0,
+                               max_burst_bytes=4096)
+
+
+def shard_runs(shape: Tuple[int, ...], itemsize: int, axis: int,
+               lo: int, hi: int) -> List[Tuple[int, int]]:
+    """Byte-level (offset, length) runs a shard ``[lo, hi)`` along ``axis``
+    occupies inside the C-ordered host buffer.
+
+    For axis 0 a shard is one contiguous run; for inner axes the shard's
+    rows interleave through the buffer, so the host-side DMA legs must be
+    logged as ``prod(shape[:axis])`` strided runs — otherwise the
+    transaction stream attributes traffic to addresses the data never
+    touches (Fig. 9 heatmaps, golden traces)."""
+    outer = int(np.prod(shape[:axis], dtype=np.int64)) if axis else 1
+    inner = int(np.prod(shape[axis + 1:], dtype=np.int64)) * itemsize
+    stride = shape[axis] * inner
+    run_len = (hi - lo) * inner
+    if run_len == 0:
+        return []
+    return [(o * stride + lo * inner, run_len) for o in range(outer)]
+
+
+class FabricCluster:
+    """N FireBridge devices behind a modeled interconnect (§IV-C at scale).
+
+    ``congestion`` configures each device's *local* memory link (as for a
+    single ``FireBridge``); ``link_config`` configures the fabric ports and
+    the host↔fabric channel (defaults to ``FABRIC_LINK``).  ``fault_plan``
+    is forked once per device and once for the fabric links, so the whole
+    cluster reproduces from one seed regardless of device count.
+    ``coverage`` (core/coverage.py) observes fabric operations, burst
+    sizes, and link congestion states when provided.
+    """
+
+    def __init__(self, n_devices: int, *, name: str = "fab",
+                 congestion: Optional[CongestionConfig] = None,
+                 link_config: Optional[CongestionConfig] = None,
+                 fault_plan=None, coverage=None) -> None:
+        if n_devices < 1:
+            raise ValueError(f"need at least one device, got {n_devices}")
+        self.n = n_devices
+        self.name = name
+        self.log = TransactionLog()            # fabric interconnect log
+        self.coverage = coverage
+        self.link_config = link_config if link_config is not None \
+            else FABRIC_LINK
+        self.fault_plan = (fault_plan.fork(f"{name}/links")
+                           if fault_plan is not None else None)
+        # device-local DDR links get distinct DoS seeds (device 0 keeps
+        # the caller's seed, so it times identically to a standalone
+        # bridge); without the reseed every device would stall at the
+        # same points — artificially synchronized cross-device timing
+        self.devices = [
+            FireBridge(f"{name}{i}",
+                       congestion=(dataclasses.replace(
+                           congestion, seed=congestion.seed + i)
+                           if congestion is not None else None),
+                       fault_plan=(fault_plan.fork(f"{name}/dev{i}")
+                                   if fault_plan is not None else None))
+            for i in range(n_devices)]
+        lc = self.link_config
+        # distinct DoS streams per link, all derived from one seed
+        self.host_link = LinkModel(lc)
+        self.ports = [LinkModel(dataclasses.replace(lc, seed=lc.seed + 1 + i))
+                      for i in range(n_devices)]
+        # host-side staging DDR (firmware-visible; host accesses are free,
+        # crossing the fabric is not)
+        self.host = MemoryBridge(self.log)
+        self.time = 0.0
+
+    # ------------------------------------------------------------- devices
+    def register_op(self, op: str, **table) -> None:
+        """Register one op's backend table on every device."""
+        for d in self.devices:
+            d.register_op(op, **table)
+
+    def launch(self, dev: int, op: str, backend: str, in_bufs: List[str],
+               out_bufs: List[str], **kw) -> None:
+        """Device-local accelerator launch (see FireBridge.launch)."""
+        self.devices[dev].launch(op, backend, in_bufs, out_bufs, **kw)
+
+    def _dev_alloc(self, dev: int, name: str, shape, dtype):
+        """Allocate (or reuse, on exact shape/dtype match) a device buffer."""
+        mem = self.devices[dev].mem
+        buf = mem.buffers.get(name)
+        if buf is not None:
+            if buf.array.shape != tuple(shape) or buf.array.dtype != dtype:
+                raise ValueError(
+                    f"device {dev} buffer {name!r} exists with shape "
+                    f"{buf.array.shape}/{buf.array.dtype}, need "
+                    f"{tuple(shape)}/{np.dtype(dtype)}")
+            return buf
+        return mem.alloc(name, shape, dtype)
+
+    def alloc_sharded(self, name: str, shape, dtype,
+                      axis: Optional[int] = 0) -> None:
+        """Allocate ``name`` on every device: split along ``axis``
+        (np.array_split bounds), or full-shape replicas when axis is None."""
+        if axis is None:
+            for i in range(self.n):
+                self._dev_alloc(i, name, shape, dtype)
+            return
+        for i, (lo, hi) in enumerate(self._shard_bounds(shape[axis])):
+            sh = tuple(shape[:axis]) + (hi - lo,) + tuple(shape[axis + 1:])
+            self._dev_alloc(i, name, sh, dtype)
+
+    # --------------------------------------------------------------- links
+    def _submit(self, link: LinkModel, engine: str, kind: str, addr: int,
+                nbytes: int, tag: str,
+                runs: Optional[List[Tuple[int, int]]] = None) -> float:
+        """One fabric transfer leg: burst-split, fault-perturbed,
+        congestion-arbitrated, transaction-logged.  ``runs`` overrides the
+        single contiguous (addr, nbytes) range with a list of strided
+        byte runs (inner-axis shards of a host buffer)."""
+        step = self.link_config.max_burst_bytes
+        bursts: List[Transaction] = []
+        for a, nb in (runs if runs is not None else [(addr, nbytes)]):
+            if nb <= 0:         # empty shard: nothing moves, no burst
+                continue        # (matches all_reduce's degenerate skip)
+            bursts += split_bursts(self.time, engine, kind, a, nb, tag,
+                                   step)
+        if not bursts:
+            return self.time
+        if self.fault_plan is not None:
+            bursts = self.fault_plan.perturb_bursts(bursts, self.log)
+        done = link.submit(bursts, self.log)
+        if self.coverage is not None:
+            for tx in bursts:
+                self.coverage.hit_burst(tx.nbytes)
+                self.coverage.hit_congestion(tx.stall)
+        return done
+
+    def _cover(self, op: str) -> None:
+        if self.coverage is not None:
+            self.coverage.hit("fabric", op)
+
+    # ----------------------------------------------------------- transfers
+    def dev_copy(self, src_dev: int, dst_dev: int, name: str,
+                 dst_name: Optional[str] = None) -> float:
+        """Device-to-device transfer: read leg on the source port, write
+        leg on the destination port, both congestion-timed."""
+        dst_name = dst_name or name
+        sbuf = self.devices[src_dev].mem.buffers[name]
+        dbuf = self._dev_alloc(dst_dev, dst_name, sbuf.array.shape,
+                               sbuf.array.dtype)
+        eng = f"d{src_dev}->d{dst_dev}"
+        done = max(
+            self._submit(self.ports[src_dev], eng, "read", sbuf.addr,
+                         sbuf.nbytes, name),
+            self._submit(self.ports[dst_dev], eng, "write", dbuf.addr,
+                         dbuf.nbytes, dst_name))
+        self.time = max(self.time, done)
+        np.copyto(dbuf.array, sbuf.array)
+        self._cover("dev_copy")
+        return done
+
+    def _shard_bounds(self, dim: int) -> List[Tuple[int, int]]:
+        """Per-device [lo, hi) index bounds along a dim of size ``dim``
+        (np.array_split semantics)."""
+        sizes = [len(ix) for ix in np.array_split(np.arange(dim), self.n)]
+        bounds, lo = [], 0
+        for s in sizes:
+            bounds.append((lo, lo + s))
+            lo += s
+        return bounds
+
+    def scatter(self, name: str, axis: int = 0) -> float:
+        """Split a host buffer across devices along ``axis`` (np.array_split
+        bounds); every shard crosses the shared host channel (contending)
+        plus its device port.  Host-side legs are logged at the shard's
+        true (strided, for inner axes) byte runs."""
+        hbuf = self.host.buffers[name]
+        shards = np.array_split(hbuf.array, self.n, axis=axis)
+        bounds = self._shard_bounds(hbuf.array.shape[axis])
+        done = self.time
+        for i, (sh, (lo, hi)) in enumerate(zip(shards, bounds)):
+            buf = self._dev_alloc(i, name, sh.shape, hbuf.array.dtype)
+            eng = f"h->d{i}"
+            runs = [(hbuf.addr + off, nb) for off, nb in
+                    shard_runs(hbuf.array.shape, hbuf.array.itemsize,
+                               axis, lo, hi)]
+            done = max(done,
+                       self._submit(self.host_link, eng, "read", 0, 0,
+                                    name, runs=runs),
+                       self._submit(self.ports[i], eng, "write", buf.addr,
+                                    sh.nbytes, name))
+            np.copyto(buf.array, sh)
+        self.time = max(self.time, done)
+        self._cover("scatter")
+        return done
+
+    def broadcast(self, name: str) -> float:
+        """Replicate a host buffer onto every device; the N copies contend
+        on the shared host channel."""
+        hbuf = self.host.buffers[name]
+        done = self.time
+        for i in range(self.n):
+            buf = self._dev_alloc(i, name, hbuf.array.shape,
+                                  hbuf.array.dtype)
+            eng = f"h->d{i}"
+            done = max(done,
+                       self._submit(self.host_link, eng, "read", hbuf.addr,
+                                    hbuf.nbytes, name),
+                       self._submit(self.ports[i], eng, "write", buf.addr,
+                                    buf.nbytes, name))
+            np.copyto(buf.array, hbuf.array)
+        self.time = max(self.time, done)
+        self._cover("broadcast")
+        return done
+
+    def gather(self, name: str, axis: int = 0) -> float:
+        """Collect per-device shards of ``name`` back into the host buffer
+        (allocated on first gather), concatenated along ``axis``."""
+        shards = [self.devices[i].mem.buffers[name] for i in range(self.n)]
+        out = (np.concatenate([b.array for b in shards], axis=axis)
+               if self.n > 1 else shards[0].array.copy())
+        hbuf = self.host.buffers.get(name)
+        if hbuf is None:
+            hbuf = self.host.alloc(name, out.shape, out.dtype)
+        if hbuf.array.shape != out.shape:
+            raise ValueError(
+                f"gather({name!r}, axis={axis}): shards assemble to "
+                f"{out.shape}, host buffer is {hbuf.array.shape}")
+        bounds = self._shard_bounds(out.shape[axis])
+        done = self.time
+        for i, (b, (lo, hi)) in enumerate(zip(shards, bounds)):
+            eng = f"d{i}->h"
+            runs = [(hbuf.addr + off, nb) for off, nb in
+                    shard_runs(out.shape, hbuf.array.itemsize, axis,
+                               lo, hi)]
+            done = max(done,
+                       self._submit(self.ports[i], eng, "read", b.addr,
+                                    b.nbytes, name),
+                       self._submit(self.host_link, eng, "write", 0, 0,
+                                    name, runs=runs))
+        self.time = max(self.time, done)
+        np.copyto(hbuf.array, out)
+        self._cover("gather")
+        return done
+
+    # ---------------------------------------------------------- collective
+    def all_reduce(self, name: str, op: str = "sum") -> float:
+        """Ring all-reduce over every device's ``name`` buffer: N-1
+        reduce-scatter steps then N-1 all-gather steps.  Each step moves
+        one chunk per device to its ring neighbour, so every port carries
+        a tx and an rx leg simultaneously — the legs contend on the port
+        link, which is where the modeled inter-device stalls come from.
+
+        The accumulation order per chunk is fixed by the ring, so results
+        (and the transaction-log digest) reproduce exactly run-to-run.
+        """
+        if op not in ("sum", "max"):
+            raise ValueError(f"unsupported all_reduce op {op!r}")
+        bufs = [self.devices[i].mem.buffers[name] for i in range(self.n)]
+        shape = bufs[0].array.shape
+        for i, b in enumerate(bufs):
+            if b.array.shape != shape:
+                raise ValueError(
+                    f"all_reduce({name!r}): device {i} shard {b.array.shape}"
+                    f" != device 0 shard {shape}")
+        self._cover("all_reduce")
+        if self.n == 1:
+            return self.time
+        flat = [b.array.reshape(-1) for b in bufs]
+        itemsize = bufs[0].array.itemsize
+        splits = np.array_split(np.arange(flat[0].size), self.n)
+        bounds = [(int(ix[0]), int(ix[-1]) + 1) if len(ix) else (0, 0)
+                  for ix in splits]
+        combine = (lambda a, b: a + b) if op == "sum" else np.maximum
+
+        def step(chunk_of: Callable[[int], int], reduce_leg: bool) -> None:
+            sends = []
+            done = self.time
+            for i in range(self.n):
+                j = (i + 1) % self.n
+                lo, hi = bounds[chunk_of(i)]
+                if lo == hi:        # degenerate chunk (more devices than
+                    continue        # elements): nothing moves, no burst
+                nbytes = (hi - lo) * itemsize
+                eng = f"d{i}->d{j}"
+                done = max(done,
+                           self._submit(self.ports[i], eng, "read",
+                                        bufs[i].addr + lo * itemsize,
+                                        nbytes, name),
+                           self._submit(self.ports[j], eng, "write",
+                                        bufs[j].addr + lo * itemsize,
+                                        nbytes, name))
+                sends.append((j, lo, hi, flat[i][lo:hi].copy()))
+            self.time = max(self.time, done)
+            for j, lo, hi, data in sends:
+                if reduce_leg:
+                    flat[j][lo:hi] = combine(flat[j][lo:hi], data)
+                else:
+                    flat[j][lo:hi] = data
+
+        for s in range(self.n - 1):             # reduce-scatter
+            step(lambda i, s=s: (i - s) % self.n, True)
+        for s in range(self.n - 1):             # all-gather
+            step(lambda i, s=s: (i + 1 - s) % self.n, False)
+        return self.time
+
+    # --------------------------------------------------------- diagnostics
+    def link_stats(self) -> Dict[str, CongestionResult]:
+        """Per-link Fig. 8 statistics: the host channel plus every port."""
+        out = {"host": self.host_link.result()}
+        for i, p in enumerate(self.ports):
+            out[f"d{i}"] = p.result()
+        return out
+
+    def total_link_stall(self) -> float:
+        return sum(sum(r.per_engine_stall.values())
+                   for r in self.link_stats().values())
+
+    def device_congestion(self) -> Optional[CongestionResult]:
+        """Merged per-device DDR-link statistics (engines prefixed
+        ``d{i}/``), or None when the devices run congestion-free — so
+        cross-scale sweeps keep reporting device-local memory stalls, not
+        just fabric-link stalls."""
+        per = [(i, r) for i, d in enumerate(self.devices)
+               if (r := d.congestion_stats()) is not None]
+        if not per:
+            return None
+        stall = {f"d{i}/{e}": v for i, r in per
+                 for e, v in r.per_engine_stall.items()}
+        busy = {f"d{i}/{e}": v for i, r in per
+                for e, v in r.per_engine_busy.items()}
+        makespan = max(r.makespan for _, r in per)
+        util = sum(r.link_utilization for _, r in per) / len(per)
+        timeline = [t for _, r in per for t in r.timeline]
+        return CongestionResult(makespan=makespan, per_engine_stall=stall,
+                                per_engine_busy=busy, link_utilization=util,
+                                timeline=timeline)
+
+    @property
+    def violations(self) -> List[str]:
+        out = list(self.log.violations)
+        for i, d in enumerate(self.devices):
+            out += [f"[d{i}] {v}" for v in d.log.violations]
+        return out
+
+    def fault_events(self) -> List:
+        """Every fault injected anywhere in the cluster (fabric links plus
+        per-device plans), for CellResult/fuzz auditing."""
+        evs = list(self.fault_plan.events) if self.fault_plan else []
+        for d in self.devices:
+            if d.mem.fault_plan is not None:
+                evs += list(d.mem.fault_plan.events)
+        return evs
+
+    def outputs(self) -> Dict[str, np.ndarray]:
+        """Host-visible final state (the cross-scale equivalence surface)."""
+        return {n: b.array.copy() for n, b in self.host.buffers.items()}
+
+    def digest(self) -> str:
+        """sha256 over the fabric log and every device log — the same-seed
+        reproducibility witness for multi-device runs."""
+        h = hashlib.sha256()
+        h.update(self.log.digest().encode())
+        for d in self.devices:
+            h.update(d.log.digest().encode())
+        return h.hexdigest()
+
+
+def sharded_launch(fab: FabricCluster, op: str, backend: str, *,
+                   inputs: Dict[str, np.ndarray],
+                   output: Tuple[str, Tuple[int, ...], Any],
+                   specs: Dict[str, Any],
+                   burst_list: Optional[Callable] = None) -> None:
+    """Run one op sharded across the cluster via sharding/specs.py layouts.
+
+    ``specs`` maps buffer name -> PartitionSpec; dims named "fabric" are
+    scattered across devices, unsharded inputs are broadcast, and the
+    output is gathered back to the host.  ``burst_list(dev, shapes)``
+    derives the device-local DMA burst list from that device's shard
+    shapes.  Because the layouts never split a reduction axis, the
+    gathered result is bit-identical to the single-device run.
+    """
+    from repro.sharding.specs import fabric_shard_axis
+
+    for name, arr in inputs.items():
+        arr = np.asarray(arr)
+        if name not in fab.host.buffers:
+            fab.host.alloc(name, arr.shape, arr.dtype)
+        fab.host.host_write(name, arr)
+        ax = fabric_shard_axis(specs[name])
+        if ax is None:
+            fab.broadcast(name)
+        else:
+            fab.scatter(name, axis=ax)
+
+    oname, oshape, odtype = output
+    oax = fabric_shard_axis(specs[oname])
+    fab.alloc_sharded(oname, oshape, odtype, axis=oax)
+    for i in range(fab.n):
+        shapes = {n: fab.devices[i].mem.buffers[n].array.shape
+                  for n in list(inputs) + [oname]}
+        bl = ((lambda i=i, shapes=shapes: burst_list(i, shapes))
+              if burst_list is not None else None)
+        fab.launch(i, op, backend, list(inputs), [oname], burst_list=bl)
+
+    if oax is not None:
+        fab.gather(oname, axis=oax)
+    else:                      # replicated output: device 0's copy crosses
+        buf = fab.devices[0].mem.buffers[oname]
+        if oname not in fab.host.buffers:
+            fab.host.alloc(oname, buf.array.shape, buf.array.dtype)
+        done = max(
+            fab._submit(fab.ports[0], "d0->h", "read", buf.addr,
+                        buf.nbytes, oname),
+            fab._submit(fab.host_link, "d0->h", "write",
+                        fab.host.buffers[oname].addr, buf.nbytes, oname))
+        fab.time = max(fab.time, done)
+        np.copyto(fab.host.buffers[oname].array, buf.array)

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.bridge import FireBridge
 from repro.core.congestion import CongestionConfig
+from repro.core.coverage import CoverageModel
 from repro.core.equivalence import compare_outputs
 from repro.core.registers import RO, W1C, RegisterFile
 from repro.core.transactions import Transaction, TransactionLog
@@ -204,9 +205,13 @@ class ScenarioResult:
 @dataclasses.dataclass
 class FuzzReport:
     """Outcome of one fuzz run; ``digest`` is the seeded-reproducibility
-    witness (same seed => identical digest, fault trace, and logs)."""
+    witness (same seed => identical digest, fault trace, and logs).
+    ``coverage`` accumulates functional-coverage bins across the run
+    (core/coverage.py) — the acceptance gate is 100% of the protocol
+    bins."""
     seed: int
     results: List[ScenarioResult]
+    coverage: Optional[CoverageModel] = None
 
     @property
     def passed(self) -> bool:
@@ -245,6 +250,8 @@ class FuzzReport:
             "failures": [f"scn{r.index}[{r.layer}]: {r.failures[0]}"
                          for r in self.failures()][:8],
             "digest": self.digest[:16],
+            "coverage": (self.coverage.summary()
+                         if self.coverage is not None else None),
         }
 
 
@@ -383,6 +390,7 @@ class ProtocolFuzzer:
                  congestion: Optional[CongestionConfig] = None,
                  engine_factory: Optional[Callable[[], Any]] = None,
                  mm_table: Optional[dict] = None,
+                 coverage: Optional[CoverageModel] = None,
                  tol: float = 1e-3) -> None:
         unknown = set(layers) - set(self.LAYERS)
         if unknown:
@@ -390,6 +398,9 @@ class ProtocolFuzzer:
         self.seed = int(seed)
         self.layers = tuple(layers)
         self.plan = FaultPlan(seed, rates=rates)
+        # functional-coverage accumulator (core/coverage.py): every
+        # scenario feeds protocol/burst/congestion/fault bins into it
+        self.coverage = coverage if coverage is not None else CoverageModel()
         self.backends = tuple(backends)
         self.congestion = congestion if congestion is not None else \
             CongestionConfig(dos_prob=0.05, seed=seed)
@@ -504,6 +515,13 @@ class ProtocolFuzzer:
                "serving": self._run_serving}[scn.layer]
         return run(scn)
 
+    def _cover_log(self, log: TransactionLog) -> None:
+        """Feed one run's transaction stream into the burst-size and
+        congestion coverage bins."""
+        for tx in log.txs:
+            self.coverage.hit_burst(tx.nbytes)
+            self.coverage.hit_congestion(tx.stall)
+
     def _run_bridge(self, scn: Scenario) -> ScenarioResult:
         table = self._matmul_table()
         from repro.kernels.systolic_matmul import ops as mm_ops
@@ -534,6 +552,9 @@ class ProtocolFuzzer:
                               bk=self.TILE, dtype_bytes=4))
             outs[backend] = {n: b.array.copy()
                              for n, b in fb.mem.buffers.items()}
+            self._cover_log(fb.log)
+            for ev in plan.events:
+                self.coverage.hit("fault_kind", ev.kind)
             if len(fb.log.faults) != len(plan.events):
                 failures.append(
                     f"audit mismatch on {backend}: {len(plan.events)} "
@@ -597,12 +618,15 @@ class ProtocolFuzzer:
             elif k == "w1c":
                 dev.csr.fb_write_32(_INT, op[1])
                 shadow.write(_INT, op[1])
+                self.coverage.hit("protocol", "w1c_clear")
             elif k == "doorbell":
                 before = len(shadow.violations)
                 dev.csr.fb_write_32(_DOORBELL, op[1])
                 shadow.write(_DOORBELL, op[1])
                 if len(shadow.violations) > before:
                     expect("doorbell_busy", "rang DOORBELL mid-job")
+                else:
+                    self.coverage.hit("protocol", "doorbell_ok")
             elif k in ("poll_idle", "poll_never"):
                 mask, value = (1, 0) if k == "poll_idle" else (2, 2)
                 before = len(shadow.violations)
@@ -611,9 +635,15 @@ class ProtocolFuzzer:
                 if len(shadow.violations) > before:
                     expect("poll_timeout",
                            f"mask={mask:#x} after {op[1]} reads")
+                else:
+                    self.coverage.hit("protocol", "poll_ok")
                 if got != want:
                     failures.append(
                         f"poll({k}): device returned {got}, shadow {want}")
+        # violation-path protocol bins come from the recorded expectations
+        for ev in faults:
+            self.coverage.hit("protocol", ev.kind)
+        self._cover_log(log)
         if list(log.violations) != shadow.violations:
             failures.append(
                 f"violation audit mismatch: device {log.violations} != "
@@ -672,7 +702,15 @@ class ProtocolFuzzer:
                 elif kind == "pad_straddle":
                     plan._inject("serving", "pad_straddle",
                                  f"rid {rid} len {ln}", None)
+                else:
+                    self.coverage.hit("serving", "ok")
         eng.run_until_done()
+        for ev in plan.events:
+            if ev.layer == "serving":
+                self.coverage.hit("serving", ev.kind)
+            elif ev.layer == "bridge":
+                self.coverage.hit("fault_kind", ev.kind)
+        self._cover_log(eng.mem.log)
         faults = list(plan.events)
         n_bridge = sum(1 for e in faults if e.layer == "bridge")
         if len(eng.mem.log.faults) != n_bridge:
@@ -713,7 +751,7 @@ class ProtocolFuzzer:
     def run(self, n_scenarios: int) -> FuzzReport:
         results = [self.run_scenario(self.scenario(i))
                    for i in range(n_scenarios)]
-        return FuzzReport(self.seed, results)
+        return FuzzReport(self.seed, results, coverage=self.coverage)
 
     def shrink(self, scn: Scenario) -> Tuple[Scenario, ScenarioResult]:
         """Minimize a failing scenario to its shortest failing op prefix.

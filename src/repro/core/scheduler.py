@@ -26,6 +26,7 @@ sequential per-op loop on a >=8-cell sweep (the Fig. 5 batched lane).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -35,12 +36,46 @@ import numpy as np
 from repro.core.bridge import FireBridge
 from repro.core.congestion import CongestionConfig, CongestionResult
 from repro.core.equivalence import EquivalenceReport, compare_outputs
+from repro.core.fabric import FabricCluster
 from repro.core.fuzz import FaultEvent, FaultPlan
+
+
+def _freeze(v: Any) -> Tuple:
+    """Structural, hashable identity of one config value.
+
+    ``repr`` is NOT identity here: equal numpy arrays are distinct objects
+    (and large ones truncate to "..." making *unequal* arrays collide), and
+    dataclasses with equal fields repr differently once they hold arrays.
+    Hash by structure instead — ndarray by shape/dtype/content digest,
+    dataclasses and containers recursively — so equal-valued configs land
+    in the same cross-backend equivalence group.
+    """
+    if isinstance(v, np.ndarray):
+        return ("ndarray", v.shape, str(v.dtype),
+                hashlib.sha256(np.ascontiguousarray(v).tobytes())
+                .hexdigest())
+    if isinstance(v, np.generic):
+        # bit-pattern identity, not value identity: item() would make
+        # NaN-valued configs unequal to themselves and silently split
+        # their equivalence group
+        return ("npscalar", str(v.dtype), v.tobytes())
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return (type(v).__name__,
+                tuple((f.name, _freeze(getattr(v, f.name)))
+                      for f in dataclasses.fields(v)))
+    if isinstance(v, dict):
+        return ("dict", tuple(sorted((str(k), _freeze(x))
+                                     for k, x in v.items())))
+    if isinstance(v, (list, tuple)):
+        return (type(v).__name__, tuple(_freeze(x) for x in v))
+    if isinstance(v, (set, frozenset)):
+        return ("set", tuple(sorted(repr(_freeze(x)) for x in v)))
+    return (type(v).__name__, repr(v))
 
 
 def _config_key(config: Dict[str, Any]) -> Tuple:
     """Hashable identity of a cell config (for cross-backend grouping)."""
-    return tuple(sorted((k, repr(v)) for k, v in config.items()))
+    return tuple(sorted((k, _freeze(v)) for k, v in config.items()))
 
 
 @dataclasses.dataclass
@@ -54,17 +89,31 @@ class SweepCell:
     ``fault_plan`` is the randomized-stimulus sweep axis (core/fuzz.py):
     when set, the cell's bridge runs fault-injected — each cell forks its
     own deterministic child plan, so concurrent cells reproduce exactly.
+
+    ``devices`` is the scale-out sweep axis: cells with devices > 1 run on
+    a ``FabricCluster`` (core/fabric.py) and their gathered host state is
+    equivalence-checked against the single-device cells of the same
+    ``(op, config)`` group — outputs must match across scales, while the
+    modeled link statistics are reported per scale.
     """
     op: str
     backend: str
     config: Dict[str, Any] = dataclasses.field(default_factory=dict)
     congestion: Optional[CongestionConfig] = None
     fault_plan: Optional[FaultPlan] = None
+    devices: int = 1
 
     @property
     def label(self) -> str:
         cfg = ",".join(f"{k}={v}" for k, v in sorted(self.config.items()))
-        return f"{self.op}[{cfg}]@{self.backend}"
+        dev = f"x{self.devices}dev" if self.devices > 1 else ""
+        return f"{self.op}[{cfg}]@{self.backend}{dev}"
+
+    @property
+    def group_member(self) -> str:
+        """Key of this cell inside its (op, config) equivalence group."""
+        return (self.backend if self.devices == 1
+                else f"{self.backend}@{self.devices}dev")
 
 
 @dataclasses.dataclass
@@ -78,6 +127,14 @@ class CellResult:
     violations: List[str]
     error: Optional[str] = None
     faults: List[FaultEvent] = dataclasses.field(default_factory=list)
+    # per-link Fig. 8 statistics when the cell ran on a FabricCluster
+    links: Optional[Dict[str, CongestionResult]] = None
+
+    @property
+    def link_stall(self) -> float:
+        """Total modeled inter-device + host-channel stall cycles."""
+        return sum(sum(r.per_engine_stall.values())
+                   for r in (self.links or {}).values())
 
 
 @dataclasses.dataclass
@@ -111,13 +168,27 @@ class SweepReport:
 
     def to_rows(self) -> List[str]:
         """CSV-ish rows for benchmark output."""
-        rows = ["cell,backend,seconds,bridge_cycles,stall_cycles,status"]
+        rows = ["cell,backend,devices,seconds,bridge_cycles,stall_cycles,"
+                "link_stall_cycles,status"]
         for r in self.cells:
             stall = (sum(r.congestion.per_engine_stall.values())
                      if r.congestion else 0.0)
             status = "error" if r.error else "ok"
-            rows.append(f"{r.cell.op},{r.cell.backend},{r.seconds:.3f},"
-                        f"{r.bridge_time:.0f},{stall:.0f},{status}")
+            rows.append(f"{r.cell.op},{r.cell.backend},{r.cell.devices},"
+                        f"{r.seconds:.3f},{r.bridge_time:.0f},{stall:.0f},"
+                        f"{r.link_stall:.0f},{status}")
+        return rows
+
+    def scaling(self) -> List[str]:
+        """Cross-scale comparison rows: modeled cycles, link stalls, and
+        wall-clock per (op, backend, devices) — the devices-sweep readout
+        (benchmarks/bench_fabric_scaling.py)."""
+        rows = ["op,backend,devices,bridge_cycles,link_stall_cycles,wall_s"]
+        for r in sorted(self.cells, key=lambda r: (r.cell.op, r.cell.backend,
+                                                   r.cell.devices)):
+            rows.append(f"{r.cell.op},{r.cell.backend},{r.cell.devices},"
+                        f"{r.bridge_time:.0f},{r.link_stall:.0f},"
+                        f"{r.seconds:.3f}")
         return rows
 
 
@@ -141,10 +212,20 @@ class CoVerifySession:
 
     def __init__(self, firmware: Callable[..., None],
                  congestion: Optional[CongestionConfig] = None,
-                 fault_plan: Optional[FaultPlan] = None) -> None:
+                 fault_plan: Optional[FaultPlan] = None,
+                 fabric_firmware: Optional[Callable[..., None]] = None,
+                 link_config: Optional[CongestionConfig] = None) -> None:
         self.firmware = firmware
         self.congestion = congestion
         self.fault_plan = fault_plan
+        # scale-out lane (core/fabric.py): when ``fabric_firmware`` is set,
+        # or a cell carries devices > 1, the cell runs on a FabricCluster
+        # with ``link_config`` fabric links; ``fabric_firmware(fab, op,
+        # backend, **config)`` takes the cluster where single-device
+        # firmware takes the bridge.  With only ``firmware`` given, it must
+        # itself accept the cluster for devices > 1 cells.
+        self.fabric_firmware = fabric_firmware
+        self.link_config = link_config
         self._ops: Dict[str, Dict[str, Any]] = {}
         self.cells: List[SweepCell] = []
 
@@ -161,21 +242,26 @@ class CoVerifySession:
     def add_cell(self, op: str, backend: str,
                  config: Optional[Dict[str, Any]] = None,
                  congestion: Optional[CongestionConfig] = None,
-                 fault_plan: Optional[FaultPlan] = None) -> SweepCell:
-        """Append one ``(op, backend, config)`` cell to the sweep."""
+                 fault_plan: Optional[FaultPlan] = None,
+                 devices: int = 1) -> SweepCell:
+        """Append one ``(op, backend, config)`` cell to the sweep;
+        ``devices > 1`` runs it sharded on a FabricCluster."""
         if op not in self._ops:
             raise KeyError(f"op {op!r} not registered")
         cell = SweepCell(op, backend, dict(config or {}),
                          congestion or self.congestion,
-                         fault_plan or self.fault_plan)
+                         fault_plan or self.fault_plan,
+                         devices=devices)
         self.cells.append(cell)
         return cell
 
     def add_sweep(self, op: str, backends: Tuple[str, ...],
-                  configs: List[Dict[str, Any]]) -> List[SweepCell]:
-        """Cross-product convenience: one cell per (backend, config)."""
-        return [self.add_cell(op, be, cfg)
-                for cfg in configs for be in backends]
+                  configs: List[Dict[str, Any]],
+                  devices: Tuple[int, ...] = (1,)) -> List[SweepCell]:
+        """Cross-product convenience: one cell per
+        (backend, config, device count)."""
+        return [self.add_cell(op, be, cfg, devices=n)
+                for cfg in configs for be in backends for n in devices]
 
     # ----------------------------------------------------------- execute
     def _run_cell(self, cell: SweepCell) -> CellResult:
@@ -183,6 +269,8 @@ class CoVerifySession:
         # thread-pool scheduling order cannot perturb the fault stream
         plan = (cell.fault_plan.fork(cell.label)
                 if cell.fault_plan is not None else None)
+        if cell.devices > 1 or self.fabric_firmware is not None:
+            return self._run_fabric_cell(cell, plan)
         fb = FireBridge(congestion=cell.congestion, fault_plan=plan)
         fb.register_op(cell.op, **self._ops[cell.op])
         t0 = time.perf_counter()
@@ -201,6 +289,35 @@ class CoVerifySession:
             violations=list(fb.log.violations),
             error=err,
             faults=list(plan.events) if plan is not None else [],
+        )
+
+    def _run_fabric_cell(self, cell: SweepCell,
+                         plan: Optional[FaultPlan]) -> CellResult:
+        """One cell on a FabricCluster: the firmware shards the op across
+        ``cell.devices`` devices and the *host-visible gathered state* is
+        what enters the cross-scale equivalence group."""
+        fab = FabricCluster(cell.devices, congestion=cell.congestion,
+                            link_config=self.link_config, fault_plan=plan)
+        fab.register_op(cell.op, **self._ops[cell.op])
+        fw = self.fabric_firmware or self.firmware
+        t0 = time.perf_counter()
+        err: Optional[str] = None
+        try:
+            fw(fab, cell.op, cell.backend, **cell.config)
+        except Exception as e:            # cell failure must not kill sweep
+            err = f"{type(e).__name__}: {e}"
+        dt = time.perf_counter() - t0
+        return CellResult(
+            cell=cell,
+            outputs=fab.outputs(),
+            seconds=dt,
+            bridge_time=max([fab.time]
+                            + [d.mem.time for d in fab.devices]),
+            congestion=fab.device_congestion(),
+            violations=fab.violations,
+            error=err,
+            faults=fab.fault_events(),
+            links=fab.link_stats(),
         )
 
     def run(self, max_workers: Optional[int] = None,
@@ -223,8 +340,11 @@ class CoVerifySession:
         groups: Dict[Tuple, Dict[str, Dict[str, np.ndarray]]] = {}
         labels: Dict[Tuple, str] = {}
         for r in results:
+            # devices is intentionally NOT part of the key: cells at
+            # different scales join one group, so the sweep diffs the
+            # 4-device gathered state against the single-device oracle
             key = (r.cell.op, _config_key(r.cell.config))
-            groups.setdefault(key, {})[r.cell.backend] = r.outputs
+            groups.setdefault(key, {})[r.cell.group_member] = r.outputs
             cfg = ",".join(f"{k}={v}"
                            for k, v in sorted(r.cell.config.items()))
             labels[key] = f"{r.cell.op}[{cfg}]"

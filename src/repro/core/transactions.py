@@ -8,6 +8,7 @@ heatmaps — the TPU-side analogue of FireBridge's AXI monitors.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from collections import defaultdict
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -24,6 +25,20 @@ class Transaction:
     tag: str = ""
     stall: float = 0.0          # stall time injected by the congestion model
     complete: float = 0.0       # completion time (filled by congestion model)
+
+
+def split_bursts(time: float, engine: str, kind: str, addr: int,
+                 nbytes: int, tag: str, step: int) -> List[Transaction]:
+    """Split one transfer into link-level bursts of at most ``step`` bytes
+    (0 = never split).  The ONE splitter shared by device-local DDR
+    accesses (bridge.py), the fabric links (fabric.py), and the
+    cluster-serving host channel (serving/cluster.py), so burst semantics
+    cannot drift between the traces they produce."""
+    if step <= 0 or nbytes <= step:
+        return [Transaction(time, engine, kind, addr, nbytes, tag=tag)]
+    return [Transaction(time, engine, kind, addr + off,
+                        min(step, nbytes - off), tag=tag)
+            for off in range(0, nbytes, step)]
 
 
 class TransactionLog:
@@ -59,6 +74,36 @@ class TransactionLog:
     def audit(self) -> Dict[str, int]:
         """Counts for the violation/fault audit channels."""
         return {"violations": len(self.violations), "faults": len(self.faults)}
+
+    # ------------------------------------------------- golden-trace format
+    def canonical(self) -> List[str]:
+        """Stable one-line-per-transaction rendering of the stream plus the
+        audit channels — the golden-trace format (tests/golden/*.trace).
+
+        Floats are fixed to 6 decimals so the text (and its digest) is
+        identical across platforms and numpy versions.
+        """
+        lines = []
+        for t in self.txs:
+            line = (f"{t.time:.6f} {t.engine} {t.kind} {t.addr:#x} "
+                    f"{t.nbytes} stall={t.stall:.6f} "
+                    f"complete={t.complete:.6f}")
+            if t.tag:
+                line += f" tag={t.tag}"
+            lines.append(line)
+        lines += [f"violation: {v}" for v in self.violations]
+        lines += [f"fault: {f}" for f in self.faults]
+        return lines
+
+    def digest(self) -> str:
+        """sha256 over the canonical trace — the seeded-reproducibility
+        witness used by the golden-trace regression tests and the fabric
+        same-seed checks."""
+        h = hashlib.sha256()
+        for line in self.canonical():
+            h.update(line.encode())
+            h.update(b"\n")
+        return h.hexdigest()
 
     # ------------------------------------------------------------ queries
     def total_bytes(self, engine: Optional[str] = None) -> int:

@@ -32,6 +32,29 @@ def matmul_firmware(fb, op, backend, *, size, tile: int = 32):
                   dtype_bytes=4))
 
 
+def matmul_fabric_firmware(fab, op, backend, *, size, tile: int = 32):
+    """Sharded fabric counterpart of ``matmul_firmware`` (same seeded data,
+    same host buffer names): row-shard A/C across the cluster, broadcast B
+    — the ``sharding/specs.py`` "systolic_matmul" fabric layout — then
+    gather C.  K is never split, so the gathered C is bit-identical to the
+    single-device launch of the same backend.
+    """
+    from repro.core.fabric import sharded_launch
+    from repro.sharding.specs import FABRIC_OP_SPECS
+
+    rng = np.random.default_rng(size)
+    a = rng.normal(size=(size, size)).astype(np.float32)
+    b = rng.normal(size=(size, size)).astype(np.float32)
+    sharded_launch(
+        fab, op, backend,
+        inputs={"a": a, "b": b},
+        output=("c", (size, size), np.float32),
+        specs=FABRIC_OP_SPECS["systolic_matmul"],
+        burst_list=lambda dev, shapes: mm_ops.transactions(
+            shapes["c"][0], size, size,
+            bm=min(tile, shapes["c"][0]), bn=tile, bk=tile, dtype_bytes=4))
+
+
 def matmul_backends(tile: int = 32, jit: bool = True) -> dict:
     """oracle/interpret/compiled backend table for register_op.
 

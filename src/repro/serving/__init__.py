@@ -1,3 +1,4 @@
+from repro.serving.cluster import ClusterServingEngine
 from repro.serving.engine import Request, ServingEngine
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["ClusterServingEngine", "Request", "ServingEngine"]

@@ -50,7 +50,8 @@ class ServingEngine:
                  ctx: Optional[ShardCtx] = None,
                  prompt_pad: int = 16,
                  congestion: Optional[CongestionConfig] = None,
-                 fault_plan=None):
+                 fault_plan=None,
+                 jit_fns=None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -59,9 +60,21 @@ class ServingEngine:
         self.prompt_pad = prompt_pad
         self.congestion = congestion
 
-        self._prefill = jax.jit(make_prefill_fn(cfg, flags, ctx, max_len))
-        self._decode = jax.jit(make_decode_fn(cfg, flags, ctx))
+        # `jit_fns` shares one (prefill, decode) executable pair across
+        # device-local engines of a ClusterServingEngine — N devices, one
+        # compilation (the FireSim "build once, run many" economy).
+        if jit_fns is not None:
+            self._prefill, self._decode = jit_fns
+        else:
+            self._prefill = jax.jit(make_prefill_fn(cfg, flags, ctx,
+                                                    max_len))
+            self._decode = jax.jit(make_decode_fn(cfg, flags, ctx))
         self.reset(fault_plan=fault_plan)
+
+    @property
+    def jit_fns(self):
+        """The shareable (prefill, decode) executable pair."""
+        return (self._prefill, self._decode)
 
     def reset(self, fault_plan=None) -> None:
         """Restore fresh-engine state (cache, slots, queues, control plane)

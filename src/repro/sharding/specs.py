@@ -210,6 +210,40 @@ def to_shardings(specs: Any, mesh) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Fabric (multi-device co-verification) layouts: which dim of each op buffer
+# is split across the FabricCluster devices (core/fabric.py).  Expressed as
+# PartitionSpecs over a "fabric" axis so the scale-out layouts use the same
+# vocabulary as the training/serving mesh layouts above.  Reduction axes are
+# never split, so sharded launches stay bit-identical to one device.
+# ---------------------------------------------------------------------------
+
+FABRIC_AXIS = "fabric"
+
+FABRIC_OP_SPECS = {
+    # C = A @ B: row-shard A and C, replicate B (K is never split)
+    "systolic_matmul": {"a": P(FABRIC_AXIS, None), "b": P(None, None),
+                        "c": P(FABRIC_AXIS, None)},
+    # flash attention, kernel layout (B, H, S, D): heads are independent,
+    # so head-sharding q/k/v/o is exact; GQA groups stay device-aligned
+    # whenever n_devices divides both H and KH.
+    "flash_attention": {"q": P(None, FABRIC_AXIS, None, None),
+                        "k": P(None, FABRIC_AXIS, None, None),
+                        "v": P(None, FABRIC_AXIS, None, None),
+                        "o": P(None, FABRIC_AXIS, None, None)},
+}
+
+
+def fabric_shard_axis(spec: P, axis_name: str = FABRIC_AXIS) -> Optional[int]:
+    """Index of the dim a PartitionSpec shards on ``axis_name`` (None when
+    the buffer is replicated across the fabric)."""
+    for i, s in enumerate(tuple(spec)):
+        names = s if isinstance(s, tuple) else (s,)
+        if axis_name in [n for n in names if n is not None]:
+            return i
+    return None
+
+
+# ---------------------------------------------------------------------------
 # ZeRO sharding: additionally shard a replicated dim over the data axes.
 # Level 1: optimizer moments (+grad accumulators); level 3: master params too
 # (GSPMD then inserts the FSDP all-gathers in the forward pass).

@@ -1,0 +1,102 @@
+"""Functional-coverage model (core/coverage.py): bin bookkeeping, hole
+naming, and the acceptance gate — the 200-scenario protocol fuzz run must
+reach 100% of the register-protocol bins."""
+import numpy as np
+import pytest
+
+from repro.core import CoverageModel, ProtocolFuzzer
+from repro.core.coverage import (BURST_BUCKETS, FAULT_BINS, GROUPS,
+                                 PROTOCOL_BINS)
+from repro.core.fuzz import DEFAULT_RATES
+
+
+def test_declared_bins_and_drift_guards():
+    cov = CoverageModel()
+    for g, bins in GROUPS.items():
+        assert cov.percent(g) == 0.0 and not cov.covered(g)
+        assert cov.holes(g) == [f"{g}.{b}" for b in bins]
+    cov.hit("protocol", "doorbell_ok")
+    assert cov.counts["protocol"]["doorbell_ok"] == 1
+    with pytest.raises(KeyError):
+        cov.hit("protocol", "no_such_bin")
+    with pytest.raises(KeyError):
+        cov.hit("no_such_group", "doorbell_ok")
+
+
+def test_fault_bins_match_fuzz_taxonomy():
+    # the coverage bin set is pinned to the injected-fault taxonomy; if a
+    # fault kind is added to fuzz.DEFAULT_RATES this must be updated too
+    assert set(FAULT_BINS) == set(DEFAULT_RATES)
+
+
+def test_burst_bucketing_boundaries():
+    cov = CoverageModel()
+    cov.hit_burst(4)            # CSR word
+    cov.hit_burst(64)
+    cov.hit_burst(65)
+    cov.hit_burst(1024)
+    cov.hit_burst(4096)
+    cov.hit_burst(4097)
+    c = cov.counts["burst_size"]
+    assert c == {"le_64B": 2, "le_1KB": 2, "le_4KB": 1, "gt_4KB": 1}
+    assert cov.covered("burst_size")
+
+
+def test_congestion_bucketing():
+    cov = CoverageModel()
+    cov.hit_congestion(0.0)
+    cov.hit_congestion(12.5)
+    assert cov.counts["congestion"] == {"free": 1, "stalled": 1}
+
+
+def test_report_names_every_hole():
+    cov = CoverageModel()
+    for b in PROTOCOL_BINS:
+        if b not in ("poll_timeout", "doorbell_busy"):
+            cov.hit("protocol", b)
+    rep = cov.report(groups=["protocol"])
+    assert "UNCOVERED" in rep
+    assert "protocol.poll_timeout" in rep
+    assert "protocol.doorbell_busy" in rep
+    assert "protocol.doorbell_ok" not in rep.split("UNCOVERED")[1]
+    cov.hit("protocol", "poll_timeout")
+    cov.hit("protocol", "doorbell_busy")
+    assert "no uncovered bins" in cov.report(groups=["protocol"])
+    assert cov.percent("protocol") == 100.0
+
+
+def test_merge_accumulates():
+    a, b = CoverageModel(), CoverageModel()
+    a.hit("protocol", "w1c_clear", 2)
+    b.hit("protocol", "w1c_clear", 3)
+    b.hit("protocol", "poll_ok")
+    a.merge(b)
+    assert a.counts["protocol"]["w1c_clear"] == 5
+    assert a.counts["protocol"]["poll_ok"] == 1
+
+
+@pytest.mark.slow
+def test_fuzz_acceptance_run_closes_protocol_coverage():
+    """Acceptance: the 200-scenario fuzz run reaches 100% of the protocol
+    bins (and the shared-stimulus bins it also feeds), and the report
+    names any hole it finds in the not-exercised groups."""
+    fz = ProtocolFuzzer(seed=0, layers=("bridge", "registers"))
+    report = fz.run(200)
+    assert report.passed, report.summary()
+    cov = report.coverage
+    assert cov is fz.coverage
+    assert cov.covered("protocol"), \
+        f"uncovered protocol bins: {cov.holes('protocol')}"
+    assert cov.percent("protocol") == 100.0
+    assert cov.covered("fault_kind"), cov.holes("fault_kind")
+    assert cov.covered("burst_size"), cov.holes("burst_size")
+    assert cov.covered("congestion"), cov.holes("congestion")
+    # the report names exactly the holes of the layers that did not run
+    rep = cov.report()
+    assert "protocol     8/8 = 100.0%" in rep
+    for hole in cov.holes("serving") + cov.holes("fabric"):
+        assert hole in rep
+    # summary plumbing for benchmarks / the CLI
+    s = report.summary()
+    assert s["coverage"]["protocol"]["percent"] == 100.0
+    assert s["coverage"]["protocol"]["holes"] == []

@@ -1,0 +1,113 @@
+"""Golden-trace regression tests: canonical TransactionLog digests for a
+fixed-seed single-device launch and a fixed-seed fabric all_reduce,
+diffed line-by-line against committed traces (tests/golden/*.trace).
+
+A trace file holds the canonical rendering (transactions.canonical());
+its sha256 is the digest.  On mismatch the test prints the FIRST
+divergent transaction — the co-verification analogue of dropping a
+waveform cursor on the first diverging signal.
+
+Regenerate after an *intentional* timing-model change with:
+
+    PYTHONPATH=src python tests/test_golden_traces.py --regen
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import CongestionConfig, FabricCluster, FireBridge
+from repro.kernels.systolic_matmul.sweep import (matmul_backends,
+                                                 matmul_firmware)
+
+GOLDEN = Path(__file__).resolve().parent / "golden"
+
+# Frozen stimulus parameters: changing ANY of these invalidates the traces.
+SINGLE_CONG = CongestionConfig(dos_prob=0.05, seed=7)
+FABRIC_LINK = CongestionConfig(link_bytes_per_cycle=64.0, base_latency=100.0,
+                               max_burst_bytes=4096, dos_prob=0.05, seed=11)
+
+
+def single_device_trace() -> list:
+    """Fixed-seed single-device matmul launch under online congestion."""
+    fb = FireBridge(congestion=SINGLE_CONG)
+    fb.register_op("mm", **matmul_backends(tile=16, jit=False))
+    matmul_firmware(fb, "mm", "oracle", size=32, tile=16)
+    return fb.log.canonical()
+
+
+def fabric_all_reduce_trace() -> list:
+    """Fixed-seed 4-device ring all_reduce over the modeled fabric."""
+    fab = FabricCluster(4, link_config=FABRIC_LINK)
+    for i in range(4):
+        fab.devices[i].mem.alloc("grad", (16, 16), np.float32)
+        fab.devices[i].mem.host_write(
+            "grad", np.full((16, 16), float(i + 1), np.float32))
+    fab.all_reduce("grad")
+    lines = ["# fabric interconnect log"] + fab.log.canonical()
+    for i, d in enumerate(fab.devices):
+        lines += [f"# device {i} log"] + d.log.canonical()
+    return lines
+
+
+TRACES = {
+    "single_device_launch": single_device_trace,
+    "fabric_all_reduce": fabric_all_reduce_trace,
+}
+
+
+def _diff(name: str, live: list, golden: list) -> None:
+    if live == golden:
+        return
+    n = min(len(live), len(golden))
+    for i in range(n):
+        if live[i] != golden[i]:
+            pytest.fail(
+                f"{name}: first divergent transaction at line {i + 1}:\n"
+                f"  golden: {golden[i]}\n"
+                f"  live:   {live[i]}\n"
+                f"(lengths: golden {len(golden)}, live {len(live)}; "
+                f"regenerate with `python tests/test_golden_traces.py "
+                f"--regen` ONLY for intentional timing-model changes)")
+    pytest.fail(
+        f"{name}: trace lengths diverge after a common prefix of {n} "
+        f"lines (golden {len(golden)}, live {len(live)}); first extra "
+        f"line: "
+        f"{(live + golden)[n]!r}")
+
+
+@pytest.mark.parametrize("name", sorted(TRACES))
+def test_trace_matches_golden(name):
+    golden = (GOLDEN / f"{name}.trace").read_text().splitlines()
+    _diff(name, TRACES[name](), golden)
+
+
+@pytest.mark.parametrize("name", sorted(TRACES))
+def test_trace_is_run_to_run_deterministic(name):
+    assert TRACES[name]() == TRACES[name]()
+
+
+def test_single_device_digest_matches_canonical():
+    fb = FireBridge(congestion=SINGLE_CONG)
+    fb.register_op("mm", **matmul_backends(tile=16, jit=False))
+    matmul_firmware(fb, "mm", "oracle", size=32, tile=16)
+    import hashlib
+    h = hashlib.sha256()
+    for line in fb.log.canonical():
+        h.update(line.encode())
+        h.update(b"\n")
+    assert fb.log.digest() == h.hexdigest()
+
+
+if __name__ == "__main__":
+    if "--regen" not in sys.argv[1:]:
+        sys.exit("usage: python tests/test_golden_traces.py --regen")
+    GOLDEN.mkdir(exist_ok=True)
+    for name, fn in TRACES.items():
+        path = GOLDEN / f"{name}.trace"
+        lines = fn()
+        path.write_text("\n".join(lines) + "\n")
+        print(f"wrote {path} ({len(lines)} lines)")

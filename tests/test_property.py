@@ -45,6 +45,76 @@ def test_congestion_conservation_and_determinism(txs, seed):
     assert all(s >= 0 for s in r1.per_engine_stall.values())
 
 
+# ------------------------------------------------------------------- fabric
+
+
+@st.composite
+def fabric_cases(draw):
+    """Arbitrary (shape, device count, shard axis) scatter/gather cases —
+    including uneven splits and more devices than rows."""
+    nd = draw(st.integers(1, 3))
+    shape = tuple(draw(st.integers(1, 12)) for _ in range(nd))
+    n_dev = draw(st.integers(1, 6))
+    axis = draw(st.integers(0, nd - 1))
+    return shape, n_dev, axis
+
+
+@given(fabric_cases(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_fabric_scatter_gather_roundtrip_bit_identical(case, seed):
+    """Shard/gather round-trips leave buffers bit-identical for arbitrary
+    shapes x device counts x axes (core/fabric.py)."""
+    from repro.core.fabric import FabricCluster
+    shape, n_dev, axis = case
+    fab = FabricCluster(n_dev, link_config=CongestionConfig(
+        dos_prob=0.1, seed=seed, max_burst_bytes=64))
+    data = np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+    fab.host.alloc("x", shape, np.float32)
+    fab.host.host_write("x", data)
+    fab.scatter("x", axis=axis)
+    # device shards are exactly the np.array_split slices
+    for dev, sh in zip(fab.devices, np.array_split(data, n_dev, axis=axis)):
+        assert np.array_equal(dev.mem.buffers["x"].array, sh)
+    fab.host.buffers["x"].array[:] = 0
+    fab.gather("x", axis=axis)
+    assert np.array_equal(fab.host.host_read("x"), data)
+
+
+@st.composite
+def fabric_traffic(draw):
+    n_bufs = draw(st.integers(1, 4))
+    sizes = [draw(st.integers(1, 64)) for _ in range(n_bufs)]
+    return sizes
+
+
+@given(fabric_traffic(), fabric_traffic(), st.integers(2, 4))
+@settings(max_examples=30, deadline=None)
+def test_fabric_timing_monotonicity(base, extra, n_dev):
+    """Adding contending traffic never decreases modeled completion time
+    (DoS off: arbitration is work-conserving, so more traffic can only
+    push the link-free horizon out)."""
+    from repro.core.fabric import FabricCluster
+
+    def run(extra_first):
+        fab = FabricCluster(n_dev, link_config=CongestionConfig(
+            dos_prob=0.0, max_burst_bytes=128))
+        if extra_first:
+            for j, rows in enumerate(extra):
+                name = f"y{j}"
+                fab.host.alloc(name, (rows, 4), np.float32)
+                fab.host.host_write(name, np.zeros((rows, 4), np.float32))
+                fab.broadcast(name)
+        for j, rows in enumerate(base):
+            name = f"x{j}"
+            fab.host.alloc(name, (rows, 4), np.float32)
+            fab.host.host_write(name, np.zeros((rows, 4), np.float32))
+            fab.scatter(name)
+            fab.gather(name)
+        return fab.time
+
+    assert run(extra_first=True) >= run(extra_first=False)
+
+
 # ----------------------------------------------------------------- registers
 
 

@@ -64,6 +64,68 @@ def test_sweep_cells_carry_online_congestion():
     assert r.bridge_time >= r.congestion.makespan
 
 
+def test_config_key_groups_equal_ndarray_configs():
+    """Regression: _config_key used repr(v), so equal-valued numpy-array
+    configs landed in different equivalence groups and the cross-backend
+    diff was silently skipped.  Structural hashing must group them."""
+    from repro.core.scheduler import _config_key
+
+    def firmware(fb, op, backend, *, scale):
+        fb.mem.alloc("c", scale.shape, np.float32)
+        fb.launch(op, backend, [], ["c"], scale=scale)
+
+    table = matmul_backends(jit=False)
+
+    def interp(scale):
+        return np.asarray(table["oracle"](scale, np.eye(2,
+                                                        dtype=np.float32)))
+    sess = CoVerifySession(firmware)
+    sess.register_op("sc", oracle=lambda scale: scale @ np.eye(
+        2, dtype=np.float32), interpret=interp)
+    # two *distinct but equal* ndarray objects, one per backend
+    sess.add_cell("sc", "oracle",
+                  {"scale": np.ones((2, 2), np.float32)})
+    sess.add_cell("sc", "interpret",
+                  {"scale": np.ones((2, 2), np.float32)})
+    report = sess.run(max_workers=1)
+    # one group containing BOTH backends => the diff actually ran
+    assert len(report.equivalence) == 1
+    (eq,) = report.equivalence.values()
+    assert set(eq.backends) == {"oracle", "interpret"}
+    # and unequal arrays must NOT collide (repr truncation used to)
+    big_a = {"scale": np.arange(4000, dtype=np.float32)}
+    big_b = {"scale": np.arange(4000, dtype=np.float32)}
+    big_b["scale"][2000] += 1.0          # differs deep inside the "..."
+    assert _config_key(big_a) != _config_key(big_b)
+    assert _config_key(big_a) == _config_key(
+        {"scale": np.arange(4000, dtype=np.float32)})
+
+
+def test_config_key_groups_equal_dataclass_configs():
+    import dataclasses
+
+    from repro.core.scheduler import _config_key
+
+    @dataclasses.dataclass
+    class Tile:
+        bm: int
+        weights: np.ndarray
+
+    a = {"tile": Tile(32, np.ones(3, np.float32))}
+    b = {"tile": Tile(32, np.ones(3, np.float32))}
+    c = {"tile": Tile(32, np.zeros(3, np.float32))}
+    assert _config_key(a) == _config_key(b)
+    assert _config_key(a) != _config_key(c)
+    # containers recurse
+    assert _config_key({"x": [np.ones(2), 3]}) == \
+        _config_key({"x": [np.ones(2), 3]})
+    # numpy scalars hash by bit pattern: NaN configs must still group
+    assert _config_key({"x": np.float32("nan")}) == \
+        _config_key({"x": np.float32("nan")})
+    assert _config_key({"x": np.float32(1)}) != \
+        _config_key({"x": np.float64(1)})
+
+
 def test_cell_error_is_contained():
     sess = _session()
     sess.register_op("boom", oracle=lambda *a: (_ for _ in ()).throw(
