@@ -32,7 +32,7 @@ def _run(name: str, fn) -> list[str]:
 def main() -> None:
     from benchmarks import (bench_access_patterns, bench_bandwidth_profile,
                             bench_debug_iteration, bench_fabric_scaling,
-                            bench_fuzz, bench_hls4ml_scaling)
+                            bench_fuzz, bench_hls4ml_scaling, bench_replay)
     from benchmarks import roofline as roofline_mod
 
     print("name,us_per_call,derived")
@@ -43,6 +43,7 @@ def main() -> None:
     _run("fig9_access_patterns", bench_access_patterns.run)
     _run("fuzz_throughput", bench_fuzz.run)         # quick mode
     _run("fabric_scaling", bench_fabric_scaling.run)  # quick mode
+    _run("replay_debug_iteration", bench_replay.run)  # quick mode
 
     def _roofline():
         recs = roofline_mod.load("baseline")

@@ -15,6 +15,10 @@
                   fault/fabric stimulus, fed by fuzz + fabric
   fuzz          — seeded fault injection + randomized protocol stimulus
                   with differential checking and trace shrinking
+  replay        — time-travel debug engine: timeline recording, full-state
+                  checkpoints at transaction boundaries, bit-identical
+                  window replay, divergence bisection in O(log N) probes
+                  + 2 window replays
   hlo_profiler  — compiled-HLO transaction extraction + roofline terms
 """
 from repro.core.bridge import Buffer, FireBridge, MemoryBridge
@@ -28,6 +32,9 @@ from repro.core.fabric import FABRIC_LINK, FabricCluster, sharded_launch
 from repro.core.fuzz import (FaultEvent, FaultPlan, FuzzReport,
                              ProtocolFuzzer, run_fuzz)
 from repro.core.registers import DOORBELL, RO, RW, W1C, RegisterFile
+from repro.core.replay import (DebugSession, DivergenceReport, Recording,
+                               RecordingBridge, ReplayWindow,
+                               bisect_divergence, record_serving_storm)
 from repro.core.scheduler import (CellResult, CoVerifySession, SweepCell,
                                   SweepReport, run_sequential)
 from repro.core.transactions import Transaction, TransactionLog
@@ -40,5 +47,7 @@ __all__ = [
     "FaultEvent", "FaultPlan", "FuzzReport", "ProtocolFuzzer", "run_fuzz",
     "RegisterFile", "RO", "RW", "W1C", "DOORBELL", "CellResult",
     "CoVerifySession", "SweepCell", "SweepReport", "run_sequential",
-    "Transaction", "TransactionLog",
+    "Transaction", "TransactionLog", "DebugSession", "DivergenceReport",
+    "Recording", "RecordingBridge", "ReplayWindow", "bisect_divergence",
+    "record_serving_storm",
 ]

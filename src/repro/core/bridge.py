@@ -183,6 +183,35 @@ class MemoryBridge:
         (None when the bridge runs congestion-free)."""
         return self.link.result() if self.link is not None else None
 
+    # --------------------------------------------- checkpoint/restore hooks
+    def get_state(self) -> Dict[str, Any]:
+        """Deep snapshot of the bridge at a transaction boundary
+        (core/replay.py): DDR contents, the allocation cursor, the modeled
+        clock, the online link arbiter, the fault-plan RNG position, and
+        the transaction log.  Restoring it into a structurally identical
+        bridge makes every subsequent access replay bit-identically."""
+        return {
+            "buffers": {n: (b.addr, b.array.copy())
+                        for n, b in self.buffers.items()},
+            "next": self._next,
+            "time": self.time,
+            "log": self.log.get_state(),
+            "link": self.link.get_state() if self.link is not None else None,
+            "fault_plan": (self.fault_plan.get_state()
+                           if self.fault_plan is not None else None),
+        }
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        self.buffers = {n: Buffer(n, addr, arr.copy())
+                        for n, (addr, arr) in state["buffers"].items()}
+        self._next = state["next"]
+        self.time = state["time"]
+        self.log.set_state(state["log"])
+        if state["link"] is not None:
+            self.link.set_state(state["link"])
+        if state["fault_plan"] is not None:
+            self.fault_plan.set_state(state["fault_plan"])
+
 
 class FireBridge:
     """Top-level co-verification environment: registers + memory bridge +
@@ -252,3 +281,14 @@ class FireBridge:
     def congestion_stats(self) -> Optional[CongestionResult]:
         """Per-engine stall/busy/utilization accumulated online (Fig. 8)."""
         return self.mem.congestion_stats()
+
+    # --------------------------------------------- checkpoint/restore hooks
+    def get_state(self) -> Dict[str, Any]:
+        """Snapshot for time-travel replay (core/replay.py).  ``mem``
+        carries the shared transaction log (``self.log`` is the same
+        object), so CSR state is just values + the protocol clock."""
+        return {"mem": self.mem.get_state(), "csr": self.csr.get_state()}
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        self.mem.set_state(state["mem"])
+        self.csr.set_state(state["csr"])

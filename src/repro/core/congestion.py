@@ -24,6 +24,7 @@ loop (see tests/test_core_bridge.py::test_online_matches_offline_replay).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from collections import defaultdict
 from typing import Dict, List, Optional
@@ -177,6 +178,40 @@ class LinkModel:
             if log is not None:
                 log.log(tx)
         return last
+
+    # --------------------------------------------- checkpoint/restore hooks
+    def get_state(self) -> dict:
+        """Snapshot of the arbiter for a replay checkpoint
+        (core/replay.py): RNG stream position, link-free horizon,
+        per-engine ready/busy/stall, the round-robin pointer, and the
+        timeline (so ``result()`` stays correct after a restore).  A
+        restored link arbitrates future batches bit-identically to the
+        original run.  Timeline entries are shared, not copied — a
+        transaction is mutated only before arbitration, so the logged
+        prefix is immutable and checkpointing stays O(n) per snapshot."""
+        return {
+            "rng": copy.deepcopy(self._rng.bit_generator.state),
+            "link_free": self._link_free,
+            "ready": dict(self._ready),
+            "busy": dict(self._busy),
+            "stall": dict(self._stall),
+            "total_bytes": self._total_bytes,
+            "rr": self._rr,
+            "timeline": list(self.timeline),
+        }
+
+    def set_state(self, state: dict) -> None:
+        self._rng.bit_generator.state = copy.deepcopy(state["rng"])
+        self._link_free = state["link_free"]
+        self._ready = defaultdict(float, state["ready"])
+        self._busy = defaultdict(float, state["busy"])
+        self._stall = defaultdict(float, state["stall"])
+        self._total_bytes = state["total_bytes"]
+        self._rr = state["rr"]
+        # restored entries are aliased, not re-copied: transactions are
+        # immutable once arbitrated (mutation happens pre-submit), and the
+        # restore path is the replay hot loop
+        self.timeline[:] = state["timeline"]
 
     def result(self) -> CongestionResult:
         """Snapshot the Fig. 8 statistics accumulated so far."""

@@ -348,6 +348,50 @@ class FabricCluster:
             step(lambda i, s=s: (i + 1 - s) % self.n, False)
         return self.time
 
+    def collect_replicated(self, name: str, src_dev: int = 0) -> float:
+        """Pull one device's replica of ``name`` back to the host buffer
+        (allocated on first collect) — the writeback leg for ops whose
+        output is replicated rather than sharded (sharded_launch)."""
+        buf = self.devices[src_dev].mem.buffers[name]
+        if name not in self.host.buffers:
+            self.host.alloc(name, buf.array.shape, buf.array.dtype)
+        eng = f"d{src_dev}->h"
+        done = max(
+            self._submit(self.ports[src_dev], eng, "read", buf.addr,
+                         buf.nbytes, name),
+            self._submit(self.host_link, eng, "write",
+                         self.host.buffers[name].addr, buf.nbytes, name))
+        self.time = max(self.time, done)
+        np.copyto(self.host.buffers[name].array, buf.array)
+        return done
+
+    # --------------------------------------------- checkpoint/restore hooks
+    def get_state(self) -> Dict[str, Any]:
+        """Whole-cluster snapshot at a transaction boundary
+        (core/replay.py): every device bridge, the host staging DDR (whose
+        transaction log IS the fabric log), every port arbiter, the shared
+        host channel, the fabric clock, and the fabric-level fault plan."""
+        return {
+            "devices": [d.get_state() for d in self.devices],
+            "host": self.host.get_state(),
+            "host_link": self.host_link.get_state(),
+            "ports": [p.get_state() for p in self.ports],
+            "time": self.time,
+            "fault_plan": (self.fault_plan.get_state()
+                           if self.fault_plan is not None else None),
+        }
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        for d, s in zip(self.devices, state["devices"]):
+            d.set_state(s)
+        self.host.set_state(state["host"])
+        self.host_link.set_state(state["host_link"])
+        for p, s in zip(self.ports, state["ports"]):
+            p.set_state(s)
+        self.time = state["time"]
+        if state["fault_plan"] is not None:
+            self.fault_plan.set_state(state["fault_plan"])
+
     # --------------------------------------------------------- diagnostics
     def link_stats(self) -> Dict[str, CongestionResult]:
         """Per-link Fig. 8 statistics: the host channel plus every port."""
@@ -450,13 +494,4 @@ def sharded_launch(fab: FabricCluster, op: str, backend: str, *,
     if oax is not None:
         fab.gather(oname, axis=oax)
     else:                      # replicated output: device 0's copy crosses
-        buf = fab.devices[0].mem.buffers[oname]
-        if oname not in fab.host.buffers:
-            fab.host.alloc(oname, buf.array.shape, buf.array.dtype)
-        done = max(
-            fab._submit(fab.ports[0], "d0->h", "read", buf.addr,
-                        buf.nbytes, oname),
-            fab._submit(fab.host_link, "d0->h", "write",
-                        fab.host.buffers[oname].addr, buf.nbytes, oname))
-        fab.time = max(fab.time, done)
-        np.copyto(fab.host.buffers[oname].array, buf.array)
+        fab.collect_replicated(oname)

@@ -94,6 +94,18 @@ class RegisterFile:
         if reg.on_write is not None:
             reg.on_write(data)
 
+    # --------------------------------------------- checkpoint/restore hooks
+    def get_state(self) -> Dict:
+        """Register values + protocol clock for a replay checkpoint
+        (core/replay.py).  The register *map* (define() calls, hooks) is
+        structure, not state — a restored file must already have it."""
+        return {"vals": dict(self._val), "time": self.time}
+
+    def set_state(self, state: Dict) -> None:
+        self._val.clear()
+        self._val.update(state["vals"])
+        self.time = state["time"]
+
     # ------------------------------------------------- hardware-side access
     def hw_set(self, name: str, value: int) -> None:
         """Hardware-side status update (not a bus transaction)."""

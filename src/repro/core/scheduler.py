@@ -144,10 +144,18 @@ class SweepReport:
     ``equivalence`` holds one localized report per ``(op, config)`` group
     (cross-backend diff of final DDR state, §IV-B); ``passed`` requires
     every group equivalent, no cell errors, no protocol violations.
+
+    ``divergences`` maps each failing group to a minimal
+    ``replay.DivergenceReport``: the scheduler re-records the two
+    divergent cells as replayable timelines and bisects them, so a failing
+    sweep hands back the first divergent transaction + surrounding device
+    state instead of just "these backends disagree" (the time-travel debug
+    loop, core/replay.py).
     """
     cells: List[CellResult]
     equivalence: Dict[str, EquivalenceReport]
     wall_seconds: float
+    divergences: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def passed(self) -> bool:
@@ -164,6 +172,10 @@ class SweepReport:
             "failures": [g for g, e in self.equivalence.items()
                          if not e.passed] +
                         [r.cell.label for r in self.cells if r.error],
+            "divergences": {g: (f"op #{d.op_index} {d.event} ({d.kind}, "
+                                f"{d.n_replays} replays)"
+                                if hasattr(d, "op_index") else str(d))
+                            for g, d in self.divergences.items()},
         }
 
     def to_rows(self) -> List[str]:
@@ -321,13 +333,20 @@ class CoVerifySession:
         )
 
     def run(self, max_workers: Optional[int] = None,
-            tol: float = 1e-3) -> SweepReport:
+            tol: float = 1e-3, bisect_failures: bool = True) -> SweepReport:
         """Execute every cell (concurrently) and cross-check backends.
 
         Cells are independent, so they are dispatched to a thread pool;
         results are then grouped by ``(op, config)`` and the final DDR
         state is diffed across backends with first-divergence localization
         (equivalence.compare_outputs, §IV-B).
+
+        With ``bisect_failures`` (default), every failing equivalence
+        group is re-recorded as a replayable timeline and bisected
+        (core/replay.py): the report's ``divergences`` then names the
+        first divergent transaction and the device state around it, at
+        the cost of re-running only the two divergent cells — the
+        debug-iteration path that used to require a manual full re-run.
         """
         t0 = time.perf_counter()
         if max_workers == 1 or len(self.cells) <= 1:
@@ -338,6 +357,7 @@ class CoVerifySession:
         wall = time.perf_counter() - t0
 
         groups: Dict[Tuple, Dict[str, Dict[str, np.ndarray]]] = {}
+        members: Dict[Tuple, Dict[str, SweepCell]] = {}
         labels: Dict[Tuple, str] = {}
         for r in results:
             # devices is intentionally NOT part of the key: cells at
@@ -345,12 +365,60 @@ class CoVerifySession:
             # 4-device gathered state against the single-device oracle
             key = (r.cell.op, _config_key(r.cell.config))
             groups.setdefault(key, {})[r.cell.group_member] = r.outputs
+            members.setdefault(key, {})[r.cell.group_member] = r.cell
             cfg = ",".join(f"{k}={v}"
                            for k, v in sorted(r.cell.config.items()))
             labels[key] = f"{r.cell.op}[{cfg}]"
         eq = {labels[k]: compare_outputs(outs, tol=tol)
               for k, outs in groups.items() if len(outs) > 1}
-        return SweepReport(cells=results, equivalence=eq, wall_seconds=wall)
+        divergences: Dict[str, Any] = {}
+        if bisect_failures:
+            for key, outs in groups.items():
+                rep = eq.get(labels[key])
+                if rep is None or rep.passed or not rep.divergences:
+                    continue
+                pair = rep.divergences[0].pair
+                cells = members[key]
+                try:
+                    divergences[labels[key]] = self._bisect_cells(
+                        cells[pair[0]], cells[pair[1]])
+                except Exception as e:   # localization is best-effort —
+                    divergences[labels[key]] = (   # never fail the sweep
+                        f"bisect unavailable: {type(e).__name__}: {e}")
+        return SweepReport(cells=results, equivalence=eq, wall_seconds=wall,
+                           divergences=divergences)
+
+    def _bisect_cells(self, cell_a: SweepCell, cell_b: SweepCell,
+                      checkpoint_interval: int = 8):
+        """Re-record two divergent single-device cells as deterministic
+        timelines and bisect them to the first divergent transaction
+        (core/replay.py).  The firmware runs unmodified behind a
+        ``RecordingBridge`` facade, and each recording rebuilds the cell's
+        exact fault-plan fork and congestion link, so the recorded runs
+        reproduce the sweep's bit-for-bit."""
+        from repro.core import replay as rp
+        if cell_a.devices != 1 or cell_b.devices != 1 \
+                or self.fabric_firmware is not None:
+            raise ValueError("divergence bisection covers single-device "
+                             "cells (fabric timelines differ per scale)")
+
+        def record(cell: SweepCell):
+            def factory():
+                plan = (cell.fault_plan.fork(cell.label)
+                        if cell.fault_plan is not None else None)
+                fb = FireBridge(congestion=cell.congestion, fault_plan=plan)
+                fb.register_op(cell.op, **self._ops[cell.op])
+                return fb
+            sess = rp.DebugSession(factory, label=cell.label,
+                                   checkpoint_interval=checkpoint_interval)
+            rec = sess.record(lambda r: self.firmware(
+                rp.RecordingBridge(r), cell.op, cell.backend,
+                **cell.config))
+            return sess, rec
+
+        sa, ra = record(cell_a)
+        sb, rb = record(cell_b)
+        return rp.bisect_divergence(sa, ra, sb, rb)
 
 
 def run_sequential(session: CoVerifySession, tol: float = 1e-3

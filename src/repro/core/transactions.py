@@ -75,22 +75,63 @@ class TransactionLog:
         """Counts for the violation/fault audit channels."""
         return {"violations": len(self.violations), "faults": len(self.faults)}
 
+    # --------------------------------------------- checkpoint/restore hooks
+    def get_state(self) -> Dict:
+        """Snapshot of the log for a replay checkpoint (core/replay.py).
+        Logged entries are shared, not copied: a Transaction is mutated
+        only BEFORE it is logged (congestion arbitration, fault perturb),
+        so the list prefix is immutable and checkpointing stays O(n) per
+        snapshot instead of O(history)."""
+        return {"txs": list(self.txs),
+                "violations": list(self.violations),
+                "faults": list(self.faults)}
+
+    def set_state(self, state: Dict) -> None:
+        """Restore a snapshot IN PLACE — the log object keeps its identity,
+        so a bridge + register file sharing one log stay wired after a
+        checkpoint restore.  Entries are aliased under the same
+        immutable-once-logged invariant as ``get_state`` — the restore
+        path is the replay hot loop (bench_replay.py economics)."""
+        self.txs[:] = state["txs"]
+        self.violations[:] = state["violations"]
+        self.faults[:] = state["faults"]
+
+    def cursor(self) -> Tuple[int, int, int]:
+        """(txs, violations, faults) lengths — a position in the stream,
+        used by replay windows to attribute new entries to one timeline
+        op."""
+        return (len(self.txs), len(self.violations), len(self.faults))
+
+    def lines_since(self, cur: Tuple[int, int, int]) -> List[str]:
+        """Canonical lines appended after ``cursor()`` returned ``cur``,
+        in op-emission order (txs, then violations, then faults)."""
+        nt, nv, nf = cur
+        lines = [self.canonical_line(t) for t in self.txs[nt:]]
+        lines += [f"violation: {v}" for v in self.violations[nv:]]
+        lines += [f"fault: {f}" for f in self.faults[nf:]]
+        return lines
+
     # ------------------------------------------------- golden-trace format
-    def canonical(self) -> List[str]:
-        """Stable one-line-per-transaction rendering of the stream plus the
-        audit channels — the golden-trace format (tests/golden/*.trace).
+    @staticmethod
+    def canonical_line(t: Transaction) -> str:
+        """Stable rendering of ONE transaction — the unit the golden-trace
+        format, the replay window digests (core/replay.py), and the
+        divergence reports all share, so a burst can never render two ways.
 
         Floats are fixed to 6 decimals so the text (and its digest) is
         identical across platforms and numpy versions.
         """
-        lines = []
-        for t in self.txs:
-            line = (f"{t.time:.6f} {t.engine} {t.kind} {t.addr:#x} "
-                    f"{t.nbytes} stall={t.stall:.6f} "
-                    f"complete={t.complete:.6f}")
-            if t.tag:
-                line += f" tag={t.tag}"
-            lines.append(line)
+        line = (f"{t.time:.6f} {t.engine} {t.kind} {t.addr:#x} "
+                f"{t.nbytes} stall={t.stall:.6f} "
+                f"complete={t.complete:.6f}")
+        if t.tag:
+            line += f" tag={t.tag}"
+        return line
+
+    def canonical(self) -> List[str]:
+        """Stable one-line-per-transaction rendering of the stream plus the
+        audit channels — the golden-trace format (tests/golden/*.trace)."""
+        lines = [self.canonical_line(t) for t in self.txs]
         lines += [f"violation: {v}" for v in self.violations]
         lines += [f"fault: {f}" for f in self.faults]
         return lines

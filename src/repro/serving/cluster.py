@@ -227,6 +227,40 @@ class ClusterServingEngine:
             self.step()
         self.csr.hw_set("STATUS", 2)
 
+    # --------------------------------------------- checkpoint/restore hooks
+    def get_state(self) -> dict:
+        """Whole-cluster snapshot at a tick boundary (core/replay.py):
+        every device-local engine, the front control plane (staging DDR +
+        CSR + front log, which ``mem`` carries), the shared host channel,
+        the channel fault plan, and the placement bookkeeping."""
+        return {
+            "engines": [e.get_state() for e in self.engines],
+            "mem": self.mem.get_state(),    # front staging DDR + self.log
+            "csr": self.csr.get_state(),
+            "host_link": self.host_link.get_state(),
+            "link_plan": (self.link_plan.get_state()
+                          if self.link_plan is not None else None),
+            "time": self.time,
+            "rr": self._rr,
+            "completed": self.completed,
+            "written": set(self._written),
+            "placement": dict(self.placement),
+        }
+
+    def set_state(self, state: dict) -> None:
+        for e, s in zip(self.engines, state["engines"]):
+            e.set_state(s)
+        self.mem.set_state(state["mem"])
+        self.csr.set_state(state["csr"])
+        self.host_link.set_state(state["host_link"])
+        if state["link_plan"] is not None:
+            self.link_plan.set_state(state["link_plan"])
+        self.time = state["time"]
+        self._rr = state["rr"]
+        self.completed = state["completed"]
+        self._written = set(state["written"])
+        self.placement = dict(state["placement"])
+
     # ---------------------------------------------------------- inspection
     @property
     def requests(self) -> Dict[int, Request]:

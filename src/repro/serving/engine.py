@@ -234,6 +234,42 @@ class ServingEngine:
         the engine runs congestion-free)."""
         return self.mem.congestion_stats()
 
+    # --------------------------------------------- checkpoint/restore hooks
+    def get_state(self) -> dict:
+        """Engine snapshot at a scheduler-tick boundary (core/replay.py):
+        KV/state cache, request table, slot map, pending queue, and the
+        control plane (bridge DDR + CSR values + transaction log).  The
+        jitted prefill/decode executables are structure, not state — a
+        restored engine reuses the live ones, so restore is warm-jit cheap.
+
+        Requests are copied by rid so the slots/pending/requests aliasing
+        (one object, three views) survives the round-trip."""
+        reqs = {rid: Request(r.rid, r.prompt.copy(), r.max_new_tokens,
+                             list(r.out_tokens), r.done)
+                for rid, r in self.requests.items()}
+        return {
+            "cache": dict(self.cache),      # jax arrays are immutable
+            "requests": reqs,
+            "slots": [s.rid if s is not None else None for s in self.slots],
+            "pending": [r.rid for r in self.pending],
+            "completed": self.completed,
+            "mem": self.mem.get_state(),    # includes the shared log
+            "csr": self.csr.get_state(),
+        }
+
+    def set_state(self, state: dict) -> None:
+        self.cache = dict(state["cache"])
+        self.requests = {rid: Request(r.rid, r.prompt.copy(),
+                                      r.max_new_tokens, list(r.out_tokens),
+                                      r.done)
+                         for rid, r in state["requests"].items()}
+        self.slots = [self.requests[rid] if rid is not None else None
+                      for rid in state["slots"]]
+        self.pending = deque(self.requests[rid] for rid in state["pending"])
+        self.completed = state["completed"]
+        self.mem.set_state(state["mem"])
+        self.csr.set_state(state["csr"])
+
     def run_until_done(self, max_ticks: int = 10_000) -> None:
         self.csr.hw_set("STATUS", 1)
         for _ in range(max_ticks):

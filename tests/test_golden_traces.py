@@ -1,65 +1,223 @@
-"""Golden-trace regression tests: canonical TransactionLog digests for a
-fixed-seed single-device launch and a fixed-seed fabric all_reduce,
-diffed line-by-line against committed traces (tests/golden/*.trace).
+"""Golden-trace regression tests: canonical TransactionLog renderings for
+four fixed-seed runs — a single-device launch, a 4-device fabric
+all_reduce, a fault-plan-active fuzz scenario, and a cluster-serving
+storm — diffed line-by-line against committed traces (tests/golden/).
 
-A trace file holds the canonical rendering (transactions.canonical());
-its sha256 is the digest.  On mismatch the test prints the FIRST
-divergent transaction — the co-verification analogue of dropping a
-waveform cursor on the first diverging signal.
+Every golden run is built through a ``DebugSession`` recording
+(core/replay.py), so a mismatch is explained with TIME TRAVEL instead of
+a bare line diff: the test maps the first divergent transaction to its
+owning timeline op, replays only the surrounding window from the nearest
+checkpoint, and prints the replayed transactions plus the device state
+right after the divergent op — the co-verification analogue of dropping
+a waveform cursor on the first diverging signal with the testbench
+paused there.  The same report is saved as a debug bundle under
+``$REPLAY_ARTIFACT_DIR`` (default tests/artifacts/) for CI to upload.
 
 Regenerate after an *intentional* timing-model change with:
 
     PYTHONPATH=src python tests/test_golden_traces.py --regen
 """
+import dataclasses
+import functools
+import os
 import sys
 from pathlib import Path
+from typing import List, Optional
 
 import numpy as np
 import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import CongestionConfig, FabricCluster, FireBridge
+from repro.core import (CongestionConfig, FabricCluster, FireBridge,
+                        ProtocolFuzzer)
+from repro.core import replay as rp
 from repro.kernels.systolic_matmul.sweep import (matmul_backends,
                                                  matmul_firmware)
 
 GOLDEN = Path(__file__).resolve().parent / "golden"
+ARTIFACTS = Path(os.environ.get("REPLAY_ARTIFACT_DIR",
+                                Path(__file__).resolve().parent /
+                                "artifacts"))
 
 # Frozen stimulus parameters: changing ANY of these invalidates the traces.
 SINGLE_CONG = CongestionConfig(dos_prob=0.05, seed=7)
 FABRIC_LINK = CongestionConfig(link_bytes_per_cycle=64.0, base_latency=100.0,
                                max_burst_bytes=4096, dos_prob=0.05, seed=11)
+FUZZ_SEED = 5                   # faulty-fuzz trace: ProtocolFuzzer seed
+STORM_SEED = 0                  # cluster storm prompt seed
 
 
-def single_device_trace() -> list:
+@dataclasses.dataclass
+class GoldenRun:
+    """One recorded golden run: the rendered trace plus everything needed
+    to time-travel around a divergence."""
+    session: rp.DebugSession
+    recording: rp.Recording
+    lines: List[str]            # the trace-file rendering (materialized)
+    section_lens: List[int]     # canonical line count per log section
+    tx_lens: List[int]          # transaction count per log section
+    headers: List[Optional[str]]
+
+    @classmethod
+    def render(cls, session: rp.DebugSession, recording: rp.Recording,
+               headers: List[Optional[str]]) -> "GoldenRun":
+        logs = rp.target_logs(recording.target)
+        lines: List[str] = []
+        section_lens, tx_lens = [], []
+        for h, log in zip(headers, logs):
+            sec = log.canonical()
+            if h:
+                lines.append(h)
+            lines += sec
+            section_lens.append(len(sec))
+            tx_lens.append(len(log.txs))
+        return cls(session, recording, lines, section_lens, tx_lens,
+                   headers)
+
+    def locate(self, line_index: int):
+        """Map a global trace-line index to (log_index, tx_index) — or
+        (log_index, None) for a header / violation / fault line."""
+        pos = 0
+        for li, (h, n, ntx) in enumerate(zip(self.headers,
+                                             self.section_lens,
+                                             self.tx_lens)):
+            if h:
+                if line_index == pos:
+                    return li, None
+                pos += 1
+            if line_index < pos + n:
+                local = line_index - pos
+                return li, (local if local < ntx else None)
+            pos += n
+        return len(self.headers) - 1, None
+
+
+def single_device_run() -> GoldenRun:
     """Fixed-seed single-device matmul launch under online congestion."""
-    fb = FireBridge(congestion=SINGLE_CONG)
-    fb.register_op("mm", **matmul_backends(tile=16, jit=False))
-    matmul_firmware(fb, "mm", "oracle", size=32, tile=16)
-    return fb.log.canonical()
+    def factory():
+        fb = FireBridge(congestion=SINGLE_CONG)
+        fb.register_op("mm", **matmul_backends(tile=16, jit=False))
+        return fb
+
+    sess = rp.DebugSession(factory, checkpoint_interval=3,
+                           label="single_device_launch")
+    rec = sess.record(lambda r: matmul_firmware(
+        rp.RecordingBridge(r), "mm", "oracle", size=32, tile=16))
+    return GoldenRun.render(sess, rec, [None])
 
 
-def fabric_all_reduce_trace() -> list:
+def fabric_all_reduce_run() -> GoldenRun:
     """Fixed-seed 4-device ring all_reduce over the modeled fabric."""
-    fab = FabricCluster(4, link_config=FABRIC_LINK)
-    for i in range(4):
-        fab.devices[i].mem.alloc("grad", (16, 16), np.float32)
-        fab.devices[i].mem.host_write(
-            "grad", np.full((16, 16), float(i + 1), np.float32))
-    fab.all_reduce("grad")
-    lines = ["# fabric interconnect log"] + fab.log.canonical()
-    for i, d in enumerate(fab.devices):
-        lines += [f"# device {i} log"] + d.log.canonical()
-    return lines
+    def factory():
+        return FabricCluster(4, link_config=FABRIC_LINK)
+
+    sess = rp.DebugSession(factory, checkpoint_interval=4,
+                           label="fabric_all_reduce")
+
+    def program(rec):
+        for i in range(4):
+            rec.do("dev_alloc", i, "grad", (16, 16), np.float32)
+            rec.do("dev_host_write", i, "grad",
+                   np.full((16, 16), float(i + 1), np.float32))
+        rec.do("all_reduce", "grad", "sum")
+
+    rec = sess.record(program)
+    return GoldenRun.render(
+        sess, rec, ["# fabric interconnect log"] +
+        [f"# device {i} log" for i in range(4)])
+
+
+def faulty_fuzz_run() -> GoldenRun:
+    """Fixed-seed fault-plan-active bridge fuzz scenario (oracle backend):
+    DMA delays/reorders/splits, healed bit flips, and a perturbed
+    congestion link, all audited in the trace's fault channel."""
+    fz = ProtocolFuzzer(seed=FUZZ_SEED, layers=("bridge",),
+                        bridge_ops=(3, 4))
+    scn = fz.scenario(0)
+    sess, rec = fz._record_bridge_scenario(scn, "oracle",
+                                           checkpoint_every=1)
+    return GoldenRun.render(sess, rec, [None])
+
+
+def _storm_requests():
+    rng = np.random.default_rng(STORM_SEED)
+    return [(rid, [int(t) for t in rng.integers(0, 100, 6 + rid % 5)],
+             2 + rid % 3) for rid in range(6)]
+
+
+@functools.lru_cache(maxsize=1)
+def _cluster_engine():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, smoke
+    from repro.models import init_params
+    from repro.models.transformer import RunFlags
+    from repro.serving.cluster import ClusterServingEngine
+    cfg = smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+    return ClusterServingEngine(
+        cfg, params, n_devices=2, max_slots=2, max_len=32, prompt_pad=8,
+        flags=RunFlags(attn_impl="chunked", q_chunk=16, kv_chunk=16))
+
+
+def cluster_serving_storm_run() -> GoldenRun:
+    """Fixed cluster-serving storm: 6 requests round-robined across 2
+    device-local engines behind one CSR front-end, prompt/token DMA
+    contending on the shared host channel.  Token VALUES never enter the
+    trace (only burst metadata), so the trace is platform-independent."""
+    clu = _cluster_engine()
+
+    def factory():
+        clu.reset(None)
+        return clu
+
+    sess = rp.DebugSession(factory, checkpoint_interval=0,
+                           label="cluster_serving_storm")
+    rec = rp.record_serving_storm(sess, _storm_requests())
+    return GoldenRun.render(
+        sess, rec, ["# cluster front log"] +
+        [f"# engine {i} log" for i in range(clu.n)])
 
 
 TRACES = {
-    "single_device_launch": single_device_trace,
-    "fabric_all_reduce": fabric_all_reduce_trace,
+    "single_device_launch": single_device_run,
+    "fabric_all_reduce": fabric_all_reduce_run,
+    "faulty_fuzz": faulty_fuzz_run,
+    "cluster_serving_storm": cluster_serving_storm_run,
 }
+SLOW = {"cluster_serving_storm"}         # jits the smoke model
 
 
-def _diff(name: str, live: list, golden: list) -> None:
+def _mark(name):
+    return pytest.param(name, marks=pytest.mark.slow) if name in SLOW \
+        else name
+
+
+def _explain(name: str, run: GoldenRun, i: int, golden: list,
+             live: list) -> str:
+    """Time-travel explanation of a trace divergence at line ``i``:
+    replay the window around the owning op and render device state."""
+    li, tx = run.locate(i)
+    if tx is None:
+        return "(divergent line is a header/audit line — no replay window)"
+    op = run.recording.op_of_tx(li, tx)
+    if op < 0:
+        return "(divergent transaction predates the first timeline op)"
+    text = rp.window_report(run.session, run.recording, op)
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    bundle = ARTIFACTS / f"golden_{name}_divergence.txt"
+    bundle.write_text(
+        f"golden-trace divergence: {name} at line {i + 1}\n"
+        f"  golden: {golden[i] if i < len(golden) else '<missing>'}\n"
+        f"  live:   {live[i] if i < len(live) else '<missing>'}\n\n"
+        + text + "\n")
+    return text + f"\n(debug bundle: {bundle})"
+
+
+def _diff(name: str, run: GoldenRun, golden: list) -> None:
+    live = run.lines
     if live == golden:
         return
     n = min(len(live), len(golden))
@@ -69,31 +227,48 @@ def _diff(name: str, live: list, golden: list) -> None:
                 f"{name}: first divergent transaction at line {i + 1}:\n"
                 f"  golden: {golden[i]}\n"
                 f"  live:   {live[i]}\n"
+                f"{_explain(name, run, i, golden, live)}\n"
                 f"(lengths: golden {len(golden)}, live {len(live)}; "
                 f"regenerate with `python tests/test_golden_traces.py "
                 f"--regen` ONLY for intentional timing-model changes)")
     pytest.fail(
         f"{name}: trace lengths diverge after a common prefix of {n} "
         f"lines (golden {len(golden)}, live {len(live)}); first extra "
-        f"line: "
-        f"{(live + golden)[n]!r}")
+        f"line: {(live + golden)[n]!r}\n"
+        f"{_explain(name, run, n, golden, live)}")
 
 
-@pytest.mark.parametrize("name", sorted(TRACES))
+@pytest.mark.parametrize("name", [_mark(n) for n in sorted(TRACES)])
 def test_trace_matches_golden(name):
     golden = (GOLDEN / f"{name}.trace").read_text().splitlines()
     _diff(name, TRACES[name](), golden)
 
 
-@pytest.mark.parametrize("name", sorted(TRACES))
+@pytest.mark.parametrize("name", [_mark(n) for n in sorted(TRACES)])
 def test_trace_is_run_to_run_deterministic(name):
-    assert TRACES[name]() == TRACES[name]()
+    assert TRACES[name]().lines == TRACES[name]().lines
+
+
+@pytest.mark.parametrize("name", [_mark(n) for n in sorted(TRACES)])
+def test_full_range_replay_reproduces_trace(name):
+    """The time-travel witness on every golden run: replaying the entire
+    timeline from checkpoint 0 regenerates logs whose canonical rendering
+    (and therefore TransactionLog.digest()) equals the recorded trace
+    bit-for-bit."""
+    run = TRACES[name]()
+    w = run.session.replay(run.recording, 0, run.recording.n_ops)
+    logs = rp.target_logs(w.target)
+    lines = []
+    for h, log in zip(run.headers, logs):
+        if h:
+            lines.append(h)
+        lines += log.canonical()
+    assert lines == run.lines
 
 
 def test_single_device_digest_matches_canonical():
-    fb = FireBridge(congestion=SINGLE_CONG)
-    fb.register_op("mm", **matmul_backends(tile=16, jit=False))
-    matmul_firmware(fb, "mm", "oracle", size=32, tile=16)
+    run = single_device_run()
+    fb = run.recording.target
     import hashlib
     h = hashlib.sha256()
     for line in fb.log.canonical():
@@ -102,12 +277,28 @@ def test_single_device_digest_matches_canonical():
     assert fb.log.digest() == h.hexdigest()
 
 
+def test_explain_names_owning_op_and_replays_window():
+    """The mismatch explainer maps a transaction line to its timeline op
+    and produces a replayed window containing that op's state."""
+    run = single_device_run()
+    # pick the last transaction line of the trace
+    i = len(run.lines) - 1
+    li, tx = run.locate(i)
+    assert li == 0 and tx is not None
+    op = run.recording.op_of_tx(li, tx)
+    assert 0 <= op < run.recording.n_ops
+    text = _explain("selftest", run, i, run.lines, run.lines)
+    assert f">> op #{op}" in text
+    assert "device state after op" in text
+    assert (ARTIFACTS / "golden_selftest_divergence.txt").exists()
+
+
 if __name__ == "__main__":
     if "--regen" not in sys.argv[1:]:
         sys.exit("usage: python tests/test_golden_traces.py --regen")
     GOLDEN.mkdir(exist_ok=True)
     for name, fn in TRACES.items():
         path = GOLDEN / f"{name}.trace"
-        lines = fn()
+        lines = fn().lines
         path.write_text("\n".join(lines) + "\n")
         print(f"wrote {path} ({len(lines)} lines)")

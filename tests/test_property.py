@@ -115,6 +115,94 @@ def test_fabric_timing_monotonicity(base, extra, n_dev):
     assert run(extra_first=True) >= run(extra_first=False)
 
 
+# -------------------------------------------------------------------- replay
+
+
+@st.composite
+def replay_programs(draw):
+    """Arbitrary bridge op sequences: a few buffers, then a random mix of
+    device reads/writes, host writes, and kernel burst lists — under
+    drawn congestion + fault-plan seeds (the hostile case for replay)."""
+    n_bufs = draw(st.integers(1, 3))
+    shapes = [(draw(st.integers(1, 24)), 4) for _ in range(n_bufs)]
+    ops = []
+    for _ in range(draw(st.integers(1, 18))):
+        b = draw(st.integers(0, n_bufs - 1))
+        kind = draw(st.sampled_from(["dev_read", "dev_write", "host_write",
+                                     "burst"]))
+        ops.append((kind, b, draw(st.integers(0, 2 ** 16))))
+    return shapes, ops, draw(st.integers(0, 2 ** 20)), \
+        draw(st.integers(0, 2 ** 20))
+
+
+def _replay_session_and_program(case, interval):
+    from repro.core import replay as rp
+    from repro.core.bridge import FireBridge
+    from repro.core.fuzz import FaultPlan
+    shapes, ops, cong_seed, fault_seed = case
+
+    def factory():
+        return FireBridge(
+            congestion=CongestionConfig(dos_prob=0.2, seed=cong_seed,
+                                        max_burst_bytes=64),
+            fault_plan=FaultPlan(seed=fault_seed))
+
+    def program(rec):
+        for i, (m, n) in enumerate(shapes):
+            rec.do("alloc", f"b{i}", (m, n), np.float32)
+        for kind, b, v in ops:
+            name = f"b{b}"
+            m, n = shapes[b]
+            if kind == "dev_read":
+                rec.do("dev_read", name, "dma")
+            elif kind == "dev_write":
+                rec.do("dev_write", name,
+                       np.full((m, n), float(v % 97), np.float32), "dma")
+            elif kind == "host_write":
+                rec.do("host_write", name,
+                       np.full((m, n), float(v % 89), np.float32))
+            else:
+                rec.do("log_burst_list",
+                       [("eng_a", "read", 0x1000, 1 + v % 512),
+                        ("eng_b", "write", 0x2000, 1 + v % 256)], None)
+
+    return rp.DebugSession(factory, checkpoint_interval=interval), program
+
+
+@given(replay_programs(), st.integers(1, 7), st.data())
+@settings(max_examples=25, deadline=None)
+def test_record_replay_digest_identity(case, interval, data):
+    """Replay of ANY window of ANY recorded op sequence, at ANY checkpoint
+    interval, reproduces the recorded canonical lines (and digest)
+    bit-for-bit — fault injections and DoS stalls included
+    (core/replay.py's central contract)."""
+    sess, program = _replay_session_and_program(case, interval)
+    rec = sess.record(program)
+    n = rec.n_ops
+    lo = data.draw(st.integers(0, n), label="lo")
+    hi = data.draw(st.integers(lo, n), label="hi")
+    w = sess.replay(rec, lo, hi)
+    assert w.lines == rec.window_lines(lo, hi)
+    assert w.digest() == rec.window_digest(lo, hi)
+
+
+@given(replay_programs(), st.integers(1, 7), st.data())
+@settings(max_examples=25, deadline=None)
+def test_checkpoint_restore_roundtrip_replays_identically(case, interval,
+                                                          data):
+    """Restoring ANY transaction-boundary checkpoint and replaying to the
+    end reproduces the uninterrupted run: identical final state
+    fingerprint AND identical remaining transaction stream."""
+    from repro.core import replay as rp
+    sess, program = _replay_session_and_program(case, interval)
+    rec = sess.record(program)
+    ck = data.draw(st.sampled_from(rec.checkpoints), label="checkpoint")
+    w = sess.replay(rec, ck.op_index, rec.n_ops)
+    assert w.lines == rec.window_lines(ck.op_index, rec.n_ops)
+    assert rp.state_fingerprint(w.target.get_state()) == \
+        rec.final_fingerprint
+
+
 # ----------------------------------------------------------------- registers
 
 
