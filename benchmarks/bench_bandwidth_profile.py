@@ -4,9 +4,13 @@ DMA engines of a CGRA-style accelerator over a ResNet-18 inference
 weights DMA should therefore accumulate the most interconnect stalls,
 validating the early-modeling tradeoff exactly as the paper observes.
 
-The congestion link runs *online* (§IV-C): the bridge is constructed with
-the CongestionConfig and stalls accumulate while the layers execute — the
-stats below come straight from fb.congestion_stats(), no replay step.
+The congestion link runs *online* (§IV-C) and the numbers are read back
+through the off-chip data-movement profiler (core/profiler.py): the
+bridge runs with ``profile=True`` and every row below — per-engine bytes,
+transactions, stalls, busy cycles, link utilization, makespan, and the
+bandwidth-timeline sparklines — comes from one ``DataMovementProfiler``
+over the finished run (byte-identical to the pre-profiler readout, which
+mixed ``log.summary()`` and ``congestion_stats()``).
 """
 from __future__ import annotations
 
@@ -20,23 +24,23 @@ def run() -> list[str]:
         link_bytes_per_cycle=64.0, base_latency=40.0, dos_prob=0.02,
         seed=7, priorities=(("dma_input", 2), ("dma_output", 1),
                             ("dma_weights", 0)))
-    fb = run_cnn(specs, backend="oracle", congestion=cfg)
-    res = fb.congestion_stats()
+    fb = run_cnn(specs, backend="oracle", congestion=cfg, profile=True)
+    prof = fb.profiler()
+    ddr = prof.channel("ddr")
 
     rows = [f"# ResNet-18 {gops(specs):.2f} GOP through the bridge; "
             f"input DMA prioritized (paper's design choice); online link",
             "case,engine,bytes,transactions,stall_cycles,busy_cycles"]
-    summ = fb.log.summary()
     for e in ("dma_weights", "dma_input", "dma_output"):
+        s = ddr.engines[e]
         rows.append(
-            f"fig8,{e},{summ[e]['bytes']},{summ[e]['transactions']},"
-            f"{res.per_engine_stall.get(e, 0):.0f},"
-            f"{res.per_engine_busy.get(e, 0):.0f}")
-    rows.append(f"fig8,link_utilization,,,{res.link_utilization:.3f},")
-    rows.append(f"fig8,makespan_cycles,,,{res.makespan:.0f},")
+            f"fig8,{e},{s.bytes},{s.transactions},"
+            f"{s.stall:.0f},{s.busy:.0f}")
+    rows.append(f"fig8,link_utilization,,,{ddr.utilization:.3f},")
+    rows.append(f"fig8,makespan_cycles,,,{ddr.horizon:.0f},")
 
     # bandwidth-utilization timeline (bucketed), per engine
-    edges, tl = fb.log.bandwidth_timeline(n_buckets=24)
+    edges, tl = prof.bandwidth_timeline(n_buckets=24)
     for e, series in sorted(tl.items()):
         if not e.startswith("dma_"):
             continue

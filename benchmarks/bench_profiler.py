@@ -1,0 +1,129 @@
+"""Profiling overhead + Perfetto export economics on the 200-launch
+fault-injected fuzz workload (the same long bridge scenario the replay
+benchmark debugs).
+
+The paper positions off-chip data-movement profiling as something the
+verification loop produces as a side effect, not a separate slow pass —
+so the check here is that running the workload with ``profile=True``
+(op marks + per-burst attribution fields recorded online) costs < 10%
+wall-clock over the unprofiled run.  Post-hoc analysis (building the
+``DataMovementProfiler``, exporting the Chrome-trace JSON) is reported
+separately: it happens after the firmware returns, off the modeled path.
+
+Rows:
+
+  profile_off    median wall ms of the raw 200-launch run
+  profile_on     same run with profile=True + overhead % (asserted < 10)
+  profiler_build ms to compute the full stall attribution post-hoc
+  perfetto_export events + ms to serialize the trace (artifact written to
+                 benchmarks/artifacts/profiler_trace.json — CI uploads it)
+
+    PYTHONPATH=src:. python benchmarks/bench_profiler.py [--full]
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import DataMovementProfiler, FireBridge, ProtocolFuzzer
+from repro.kernels.systolic_matmul import ops as mm_ops
+
+OPS = 200                       # launches in the long fuzz scenario
+MAX_OVERHEAD = 0.10             # the acceptance ceiling
+ART = Path(__file__).resolve().parent / "artifacts"
+
+
+def _fuzzer() -> ProtocolFuzzer:
+    return ProtocolFuzzer(seed=0, layers=("bridge",), backends=("oracle",),
+                          bridge_ops=(OPS, OPS + 1))
+
+
+def _run_workload(fz: ProtocolFuzzer, scn, profile: bool) -> FireBridge:
+    """One oracle-backend pass over the scenario — the exact op stream
+    ``ProtocolFuzzer._run_bridge`` executes, with the bridge optionally
+    profiled."""
+    plan = fz.plan.fork(f"{scn.label}/oracle", scenario=scn.index)
+    fb = FireBridge(congestion=fz.congestion, fault_plan=plan,
+                    profile=profile)
+    fb.register_op("mm", **fz._matmul_table())
+    for j, (_, size) in enumerate(scn.ops):
+        rng = np.random.default_rng(size * 1009 + j)
+        a = rng.normal(size=(size, size)).astype(np.float32)
+        b = rng.normal(size=(size, size)).astype(np.float32)
+        fb.mem.alloc(f"a{j}", a.shape, np.float32)
+        fb.mem.alloc(f"b{j}", b.shape, np.float32)
+        fb.mem.alloc(f"c{j}", (size, size), np.float32)
+        fb.mem.host_write(f"a{j}", a)
+        fb.mem.host_write(f"b{j}", b)
+        fb.launch("mm", "oracle", [f"a{j}", f"b{j}"], [f"c{j}"],
+                  engine="mm",
+                  burst_list=lambda s=size: mm_ops.transactions(
+                      s, s, s, bm=fz.TILE, bn=fz.TILE, bk=fz.TILE,
+                      dtype_bytes=4))
+    return fb
+
+
+def _median_ms(fn, repeats: int) -> float:
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e3)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run(quick: bool = True) -> list[str]:
+    repeats = 3 if quick else 7
+    fz = _fuzzer()
+    scn = fz.scenario(0)
+    _run_workload(fz, scn, profile=False)       # warm the jitted backends
+
+    # interleave the lanes (A B A B ...) so slow-box noise hits both
+    off_ts, on_ts = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _run_workload(fz, scn, profile=False)
+        off_ts.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        fb = _run_workload(fz, scn, profile=True)
+        on_ts.append((time.perf_counter() - t0) * 1e3)
+    off_ms = sorted(off_ts)[repeats // 2]
+    on_ms = sorted(on_ts)[repeats // 2]
+    overhead = (on_ms - off_ms) / off_ms
+
+    build_ms = _median_ms(lambda: fb.profiler("bench"), repeats)
+    prof = fb.profiler("bench")
+    trace = prof.to_perfetto()
+    ART.mkdir(parents=True, exist_ok=True)
+    t0 = time.perf_counter()
+    path = prof.save_perfetto(ART / "profiler_trace.json")
+    export_ms = (time.perf_counter() - t0) * 1e3
+
+    rows = ["case,ops,events,ms,overhead_pct"]
+    rows.append(f"profile_off,{OPS},-,{off_ms:.1f},-")
+    rows.append(f"profile_on,{OPS},-,{on_ms:.1f},"
+                f"{100.0 * overhead:.1f}")
+    rows.append(f"profiler_build,{OPS},{sum(len(c.txs) for c in prof.channels)},"
+                f"{build_ms:.1f},-")
+    rows.append(f"perfetto_export,{OPS},{len(trace['traceEvents'])},"
+                f"{export_ms:.1f},-")
+    rows.append(f"artifact,{OPS},-,-,{path.name}")
+    assert overhead < MAX_OVERHEAD, (
+        f"profiling overhead {100 * overhead:.1f}% exceeds the "
+        f"{100 * MAX_OVERHEAD:.0f}% ceiling on the {OPS}-launch workload "
+        f"(off {off_ms:.1f} ms, on {on_ms:.1f} ms)")
+    return rows
+
+
+def run_full() -> list[str]:
+    return run(quick=False)
+
+
+if __name__ == "__main__":
+    print("\n".join(run(quick="--full" not in sys.argv[1:])))

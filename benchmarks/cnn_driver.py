@@ -80,14 +80,17 @@ def _round_up(n: int, m: int) -> int:
 
 def run_cnn(specs: List[ConvSpec], backend: str = "oracle",
             seed: int = 0, tile: int = 64,
-            congestion: Optional[CongestionConfig] = None) -> FireBridge:
+            congestion: Optional[CongestionConfig] = None,
+            profile: bool = False) -> FireBridge:
     """Run one inference through the bridge; returns the bridge with the
     full transaction log (3 DMA engines + CSRs).
 
     With `congestion` set the three DMA engines contend on the online
     shared link *while the layers run* (paper §IV-C) — stall statistics
-    come from fb.congestion_stats(), no post-hoc replay."""
-    fb = FireBridge("cgra", congestion=congestion)
+    come from fb.congestion_stats(), no post-hoc replay.  With `profile`
+    each layer's DMA batch is op-marked, so `fb.profiler()` reports
+    per-layer attribution (core/profiler.py; examples/profile_cnn.py)."""
+    fb = FireBridge("cgra", congestion=congestion, profile=profile)
     fb.csr.define("CTRL", 0x0)
     fb.csr.define("STATUS", 0x4, access="ro")
     fb.csr.define("LAYER", 0x8)
@@ -123,17 +126,18 @@ def run_cnn(specs: List[ConvSpec], backend: str = "oracle",
         # DMA bursts: weights prefetch, input read, output write — one
         # batch per layer, so the three engines contend on the shared link
         # (and priorities arbitrate) when congestion is enabled (§IV-C).
-        fb.mem.log_burst_list(
-            [("dma_weights", "read", fb.mem.buffers[wname].addr + off,
-              tile * tile * 4)
-             for off in range(0, w.nbytes, tile * tile * 4)] +
-            [("dma_input", "read", fb.mem.buffers[ping].addr + off,
-              tile * tile * 4)
-             for off in range(0, a.nbytes, tile * tile * 4)] +
-            [("dma_output", "write", fb.mem.buffers[pong].addr + off,
-              tile * tile * 4)
-             for off in range(0, out[:cols.shape[0], :c.cout].nbytes,
-                              tile * tile * 4)])
+        with fb.mem.mark(c.name, "dma"):
+            fb.mem.log_burst_list(
+                [("dma_weights", "read", fb.mem.buffers[wname].addr + off,
+                  tile * tile * 4)
+                 for off in range(0, w.nbytes, tile * tile * 4)] +
+                [("dma_input", "read", fb.mem.buffers[ping].addr + off,
+                  tile * tile * 4)
+                 for off in range(0, a.nbytes, tile * tile * 4)] +
+                [("dma_output", "write", fb.mem.buffers[pong].addr + off,
+                  tile * tile * 4)
+                 for off in range(0, out[:cols.shape[0], :c.cout].nbytes,
+                                  tile * tile * 4)])
         oh = c.hw // c.stride
         x = out[:oh * oh, :c.cout].reshape(oh, oh, c.cout)
         fb.csr.hw_set("STATUS", layer + 1)

@@ -11,6 +11,11 @@ Two memory columns are reported:
                      kernel operand streams only).  This is the number the
                      TPU deployment with kernels enabled would see; the
                      derivation is in kernel_traffic_model() below.
+
+Roofline placement (dominant term, attainable fraction) is computed by
+``core/profiler.RooflinePlacement`` — the same placement the
+data-movement profiler produces for per-kernel points — so this table and
+the profiler cannot disagree on what "memory-bound" means.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs import SHAPES, get_config, non_embedding_params  # noqa: E402
 from repro.core.hlo_profiler import HBM_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.core.profiler import RooflinePlacement  # noqa: E402
 
 ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
 
@@ -125,11 +131,12 @@ def render_roofline_table(recs, single_pod_only: bool = True) -> str:
         rl = r["roofline"]
         mk = kernel_traffic_model(r["arch"], r["shape"], r["world"],
                                   r["flags"].get("microbatches", 4)) / HBM_BW
-        terms = {"compute": rl["compute_s"], "memory": mk,
-                 "collective": rl["collective_s"]}
-        dom = max(terms, key=terms.get)
-        ideal = rl["model_flops_per_dev"] / PEAK_FLOPS_BF16
-        frac = ideal / max(terms.values()) if max(terms.values()) else 0.0
+        pl = RooflinePlacement(
+            f"{r['arch']}/{r['shape']}",
+            {"compute": rl["compute_s"], "memory": mk,
+             "collective": rl["collective_s"]},
+            ideal_s=rl["model_flops_per_dev"] / PEAK_FLOPS_BF16)
+        dom, frac = pl.dominant, pl.roofline_frac
         hint = _hint(r, dom)
         lines.append(
             f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "

@@ -32,7 +32,8 @@ def _run(name: str, fn) -> list[str]:
 def main() -> None:
     from benchmarks import (bench_access_patterns, bench_bandwidth_profile,
                             bench_debug_iteration, bench_fabric_scaling,
-                            bench_fuzz, bench_hls4ml_scaling, bench_replay)
+                            bench_fuzz, bench_hls4ml_scaling,
+                            bench_profiler, bench_replay)
     from benchmarks import roofline as roofline_mod
 
     print("name,us_per_call,derived")
@@ -44,6 +45,7 @@ def main() -> None:
     _run("fuzz_throughput", bench_fuzz.run)         # quick mode
     _run("fabric_scaling", bench_fabric_scaling.run)  # quick mode
     _run("replay_debug_iteration", bench_replay.run)  # quick mode
+    _run("profiler_overhead", bench_profiler.run)   # quick mode
 
     def _roofline():
         recs = roofline_mod.load("baseline")

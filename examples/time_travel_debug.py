@@ -5,7 +5,7 @@ checkpoint bisection.
 
 Every line printed is deterministic (modeled clocks, seeded faults,
 content digests — no wall time), so the transcript in
-docs/architecture.md is verified verbatim against this output by
+docs/replay.md is verified verbatim against this output by
 tests/test_replay.py::test_docs_transcript_matches_example.
 
     PYTHONPATH=src python examples/time_travel_debug.py

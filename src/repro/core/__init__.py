@@ -15,6 +15,9 @@
                   fault/fabric stimulus, fed by fuzz + fabric
   fuzz          — seeded fault injection + randomized protocol stimulus
                   with differential checking and trace shrinking
+  profiler      — off-chip data-movement profiling: exhaustive stall
+                  attribution closing to bridge.time, per-op/-engine
+                  timelines, Perfetto export, roofline placement (§IV)
   replay        — time-travel debug engine: timeline recording, full-state
                   checkpoints at transaction boundaries, bit-identical
                   window replay, divergence bisection in O(log N) probes
@@ -31,6 +34,10 @@ from repro.core.equivalence import (EquivalenceReport, check_equivalence,
 from repro.core.fabric import FABRIC_LINK, FabricCluster, sharded_launch
 from repro.core.fuzz import (FaultEvent, FaultPlan, FuzzReport,
                              ProtocolFuzzer, run_fuzz)
+from repro.core.profiler import (CATEGORIES, DataMovementProfiler,
+                                 RooflinePlacement, StallBreakdown,
+                                 profile_recording, profile_window,
+                                 validate_trace)
 from repro.core.registers import DOORBELL, RO, RW, W1C, RegisterFile
 from repro.core.replay import (DebugSession, DivergenceReport, Recording,
                                RecordingBridge, ReplayWindow,
@@ -49,5 +56,7 @@ __all__ = [
     "CoVerifySession", "SweepCell", "SweepReport", "run_sequential",
     "Transaction", "TransactionLog", "DebugSession", "DivergenceReport",
     "Recording", "RecordingBridge", "ReplayWindow", "bisect_divergence",
-    "record_serving_storm",
+    "record_serving_storm", "CATEGORIES", "DataMovementProfiler",
+    "RooflinePlacement", "StallBreakdown", "profile_recording",
+    "profile_window", "validate_trace",
 ]

@@ -24,6 +24,7 @@ behind an audited ECC-style retry — the paper's randomized memory bridge
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -33,8 +34,8 @@ import numpy as np
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
 from repro.core.registers import RegisterFile
-from repro.core.transactions import (Transaction, TransactionLog,
-                                     split_bursts)
+from repro.core.transactions import (OpMark, Transaction, TransactionLog,
+                                     record_mark, split_bursts)
 
 
 @dataclasses.dataclass
@@ -64,7 +65,8 @@ class MemoryBridge:
 
     def __init__(self, log: Optional[TransactionLog] = None,
                  congestion: Optional[CongestionConfig] = None,
-                 fault_plan: Optional["FaultPlan"] = None) -> None:
+                 fault_plan: Optional["FaultPlan"] = None,
+                 profile: bool = False) -> None:
         self.log = log if log is not None else TransactionLog()
         self._next = 0x1000_0000                    # DDR base
         self.buffers: Dict[str, Buffer] = {}
@@ -75,6 +77,22 @@ class MemoryBridge:
         self.congestion = congestion
         self.link: Optional[LinkModel] = (
             LinkModel(congestion) if congestion is not None else None)
+        # data-movement profiling (core/profiler.py): with ``profile`` the
+        # ``mark`` context manager attributes logged bursts to named ops.
+        # Marks are metadata, not replayable state — deliberately excluded
+        # from get_state/set_state.
+        self.profile = profile
+        self.marks: List[OpMark] = []
+
+    def mark(self, op: str, engine: str = "", meta: str = ""):
+        """Attribute every transaction logged inside the block to one
+        profiled op (core/profiler.py per-op timelines).  No-op unless the
+        bridge was constructed with ``profile=True``, so the fast path
+        stays mark-free."""
+        if not self.profile:
+            return contextlib.nullcontext()
+        return record_mark(self.marks, self.log, lambda: self.time, op,
+                           engine, meta)
 
     def alloc(self, name: str, shape, dtype) -> Buffer:
         """Reserve a page-aligned DDR region for ``name``."""
@@ -226,11 +244,12 @@ class FireBridge:
 
     def __init__(self, name: str = "fb",
                  congestion: Optional[CongestionConfig] = None,
-                 fault_plan: Optional["FaultPlan"] = None) -> None:
+                 fault_plan: Optional["FaultPlan"] = None,
+                 profile: bool = False) -> None:
         self.name = name
         self.log = TransactionLog()
         self.mem = MemoryBridge(self.log, congestion=congestion,
-                                fault_plan=fault_plan)
+                                fault_plan=fault_plan, profile=profile)
         self.csr = RegisterFile(f"{name}.csr", self.log)
         self._ops: Dict[str, Dict[str, Callable]] = {}
 
@@ -262,6 +281,13 @@ class FireBridge:
         so per-engine stalls are produced by the launch itself (Fig. 8).
         """
         assert backend in self.BACKENDS, backend
+        with self.mem.mark(f"{op}@{backend}", engine):
+            self._launch(op, backend, in_bufs, out_bufs, engine,
+                         burst_list, kw)
+
+    def _launch(self, op: str, backend: str, in_bufs: List[str],
+                out_bufs: List[str], engine: str,
+                burst_list: Optional[Callable], kw: Dict) -> None:
         fns = self._ops[op]
         args = [self.mem.dev_read(n, engine=f"{engine}_rd") for n in in_bufs]
         bl = burst_list or fns["burst_list"]
@@ -281,6 +307,13 @@ class FireBridge:
     def congestion_stats(self) -> Optional[CongestionResult]:
         """Per-engine stall/busy/utilization accumulated online (Fig. 8)."""
         return self.mem.congestion_stats()
+
+    def profiler(self, label: Optional[str] = None):
+        """Off-chip data-movement profile of everything logged so far
+        (core/profiler.py, §IV): exhaustive stall attribution closing to
+        ``mem.time``, per-engine/per-op series, Perfetto export."""
+        from repro.core.profiler import DataMovementProfiler
+        return DataMovementProfiler(self, label=label or self.name)
 
     # --------------------------------------------- checkpoint/restore hooks
     def get_state(self) -> Dict[str, Any]:

@@ -167,6 +167,7 @@ class LinkModel:
                 dos = cfg.dos_stall
             xfer = cfg.base_latency + tx.nbytes / cfg.link_bytes_per_cycle
             tx.stall = wait + dos
+            tx.dos = dos            # DoS component, for stall attribution
             tx.complete = start + dos + xfer
             self._link_free = tx.complete
             self._ready[e] = tx.complete + cfg.per_engine_issue_gap

@@ -31,6 +31,7 @@ because the layouts never split a reduction axis.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -40,8 +41,8 @@ import numpy as np
 from repro.core.bridge import FireBridge, MemoryBridge
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
-from repro.core.transactions import (Transaction, TransactionLog,
-                                     split_bursts)
+from repro.core.transactions import (OpMark, Transaction, TransactionLog,
+                                     record_mark, split_bursts)
 
 # Default fabric-link parameters: an inter-device serdes link is narrower
 # and longer-latency than the device-local DDR interface modeled by the
@@ -84,13 +85,19 @@ class FabricCluster:
     def __init__(self, n_devices: int, *, name: str = "fab",
                  congestion: Optional[CongestionConfig] = None,
                  link_config: Optional[CongestionConfig] = None,
-                 fault_plan=None, coverage=None) -> None:
+                 fault_plan=None, coverage=None,
+                 profile: bool = False) -> None:
         if n_devices < 1:
             raise ValueError(f"need at least one device, got {n_devices}")
         self.n = n_devices
         self.name = name
         self.log = TransactionLog()            # fabric interconnect log
         self.coverage = coverage
+        # data-movement profiling (core/profiler.py): fabric transfers and
+        # collective legs are op-marked so the profiler can attribute
+        # bytes/stalls per collective step (all_reduce leg attribution)
+        self.profile = profile
+        self.marks: List[OpMark] = []
         self.link_config = link_config if link_config is not None \
             else FABRIC_LINK
         self.fault_plan = (fault_plan.fork(f"{name}/links")
@@ -105,7 +112,8 @@ class FabricCluster:
                            congestion, seed=congestion.seed + i)
                            if congestion is not None else None),
                        fault_plan=(fault_plan.fork(f"{name}/dev{i}")
-                                   if fault_plan is not None else None))
+                                   if fault_plan is not None else None),
+                       profile=profile)
             for i in range(n_devices)]
         lc = self.link_config
         # distinct DoS streams per link, all derived from one seed
@@ -183,6 +191,15 @@ class FabricCluster:
         if self.coverage is not None:
             self.coverage.hit("fabric", op)
 
+    def _mark(self, op: str, meta: str = ""):
+        """Attribute the fabric transactions logged inside the block to
+        one collective/transfer op (core/profiler.py); no-op unless
+        constructed with ``profile=True``."""
+        if not self.profile:
+            return contextlib.nullcontext()
+        return record_mark(self.marks, self.log, lambda: self.time, op,
+                           "fabric", meta)
+
     # ----------------------------------------------------------- transfers
     def dev_copy(self, src_dev: int, dst_dev: int, name: str,
                  dst_name: Optional[str] = None) -> float:
@@ -193,12 +210,13 @@ class FabricCluster:
         dbuf = self._dev_alloc(dst_dev, dst_name, sbuf.array.shape,
                                sbuf.array.dtype)
         eng = f"d{src_dev}->d{dst_dev}"
-        done = max(
-            self._submit(self.ports[src_dev], eng, "read", sbuf.addr,
-                         sbuf.nbytes, name),
-            self._submit(self.ports[dst_dev], eng, "write", dbuf.addr,
-                         dbuf.nbytes, dst_name))
-        self.time = max(self.time, done)
+        with self._mark("dev_copy", name):
+            done = max(
+                self._submit(self.ports[src_dev], eng, "read", sbuf.addr,
+                             sbuf.nbytes, name),
+                self._submit(self.ports[dst_dev], eng, "write", dbuf.addr,
+                             dbuf.nbytes, dst_name))
+            self.time = max(self.time, done)
         np.copyto(dbuf.array, sbuf.array)
         self._cover("dev_copy")
         return done
@@ -222,19 +240,20 @@ class FabricCluster:
         shards = np.array_split(hbuf.array, self.n, axis=axis)
         bounds = self._shard_bounds(hbuf.array.shape[axis])
         done = self.time
-        for i, (sh, (lo, hi)) in enumerate(zip(shards, bounds)):
-            buf = self._dev_alloc(i, name, sh.shape, hbuf.array.dtype)
-            eng = f"h->d{i}"
-            runs = [(hbuf.addr + off, nb) for off, nb in
-                    shard_runs(hbuf.array.shape, hbuf.array.itemsize,
-                               axis, lo, hi)]
-            done = max(done,
-                       self._submit(self.host_link, eng, "read", 0, 0,
-                                    name, runs=runs),
-                       self._submit(self.ports[i], eng, "write", buf.addr,
-                                    sh.nbytes, name))
-            np.copyto(buf.array, sh)
-        self.time = max(self.time, done)
+        with self._mark("scatter", name):
+            for i, (sh, (lo, hi)) in enumerate(zip(shards, bounds)):
+                buf = self._dev_alloc(i, name, sh.shape, hbuf.array.dtype)
+                eng = f"h->d{i}"
+                runs = [(hbuf.addr + off, nb) for off, nb in
+                        shard_runs(hbuf.array.shape, hbuf.array.itemsize,
+                                   axis, lo, hi)]
+                done = max(done,
+                           self._submit(self.host_link, eng, "read", 0, 0,
+                                        name, runs=runs),
+                           self._submit(self.ports[i], eng, "write",
+                                        buf.addr, sh.nbytes, name))
+                np.copyto(buf.array, sh)
+            self.time = max(self.time, done)
         self._cover("scatter")
         return done
 
@@ -243,17 +262,18 @@ class FabricCluster:
         on the shared host channel."""
         hbuf = self.host.buffers[name]
         done = self.time
-        for i in range(self.n):
-            buf = self._dev_alloc(i, name, hbuf.array.shape,
-                                  hbuf.array.dtype)
-            eng = f"h->d{i}"
-            done = max(done,
-                       self._submit(self.host_link, eng, "read", hbuf.addr,
-                                    hbuf.nbytes, name),
-                       self._submit(self.ports[i], eng, "write", buf.addr,
-                                    buf.nbytes, name))
-            np.copyto(buf.array, hbuf.array)
-        self.time = max(self.time, done)
+        with self._mark("broadcast", name):
+            for i in range(self.n):
+                buf = self._dev_alloc(i, name, hbuf.array.shape,
+                                      hbuf.array.dtype)
+                eng = f"h->d{i}"
+                done = max(done,
+                           self._submit(self.host_link, eng, "read",
+                                        hbuf.addr, hbuf.nbytes, name),
+                           self._submit(self.ports[i], eng, "write",
+                                        buf.addr, buf.nbytes, name))
+                np.copyto(buf.array, hbuf.array)
+            self.time = max(self.time, done)
         self._cover("broadcast")
         return done
 
@@ -272,17 +292,18 @@ class FabricCluster:
                 f"{out.shape}, host buffer is {hbuf.array.shape}")
         bounds = self._shard_bounds(out.shape[axis])
         done = self.time
-        for i, (b, (lo, hi)) in enumerate(zip(shards, bounds)):
-            eng = f"d{i}->h"
-            runs = [(hbuf.addr + off, nb) for off, nb in
-                    shard_runs(out.shape, hbuf.array.itemsize, axis,
-                               lo, hi)]
-            done = max(done,
-                       self._submit(self.ports[i], eng, "read", b.addr,
-                                    b.nbytes, name),
-                       self._submit(self.host_link, eng, "write", 0, 0,
-                                    name, runs=runs))
-        self.time = max(self.time, done)
+        with self._mark("gather", name):
+            for i, (b, (lo, hi)) in enumerate(zip(shards, bounds)):
+                eng = f"d{i}->h"
+                runs = [(hbuf.addr + off, nb) for off, nb in
+                        shard_runs(out.shape, hbuf.array.itemsize, axis,
+                                   lo, hi)]
+                done = max(done,
+                           self._submit(self.ports[i], eng, "read", b.addr,
+                                        b.nbytes, name),
+                           self._submit(self.host_link, eng, "write", 0, 0,
+                                        name, runs=runs))
+            self.time = max(self.time, done)
         np.copyto(hbuf.array, out)
         self._cover("gather")
         return done
@@ -342,10 +363,14 @@ class FabricCluster:
                 else:
                     flat[j][lo:hi] = data
 
+        # one op mark per ring leg: the profiler's all_reduce attribution
+        # (which reduce-scatter / all-gather step paid which stalls)
         for s in range(self.n - 1):             # reduce-scatter
-            step(lambda i, s=s: (i - s) % self.n, True)
+            with self._mark("all_reduce", f"reduce_scatter[{s}]"):
+                step(lambda i, s=s: (i - s) % self.n, True)
         for s in range(self.n - 1):             # all-gather
-            step(lambda i, s=s: (i + 1 - s) % self.n, False)
+            with self._mark("all_reduce", f"all_gather[{s}]"):
+                step(lambda i, s=s: (i + 1 - s) % self.n, False)
         return self.time
 
     def collect_replicated(self, name: str, src_dev: int = 0) -> float:
@@ -356,12 +381,14 @@ class FabricCluster:
         if name not in self.host.buffers:
             self.host.alloc(name, buf.array.shape, buf.array.dtype)
         eng = f"d{src_dev}->h"
-        done = max(
-            self._submit(self.ports[src_dev], eng, "read", buf.addr,
-                         buf.nbytes, name),
-            self._submit(self.host_link, eng, "write",
-                         self.host.buffers[name].addr, buf.nbytes, name))
-        self.time = max(self.time, done)
+        with self._mark("collect_replicated", name):
+            done = max(
+                self._submit(self.ports[src_dev], eng, "read", buf.addr,
+                             buf.nbytes, name),
+                self._submit(self.host_link, eng, "write",
+                             self.host.buffers[name].addr, buf.nbytes,
+                             name))
+            self.time = max(self.time, done)
         np.copyto(self.host.buffers[name].array, buf.array)
         return done
 
@@ -403,6 +430,13 @@ class FabricCluster:
     def total_link_stall(self) -> float:
         return sum(sum(r.per_engine_stall.values())
                    for r in self.link_stats().values())
+
+    def profiler(self, label: Optional[str] = None):
+        """Data-movement profile of the whole cluster (core/profiler.py):
+        one channel per fabric port plus the shared host channel and every
+        device's DDR/CSR, with per-collective-leg op attribution."""
+        from repro.core.profiler import DataMovementProfiler
+        return DataMovementProfiler(self, label=label or self.name)
 
     def device_congestion(self) -> Optional[CongestionResult]:
         """Merged per-device DDR-link statistics (engines prefixed

@@ -166,6 +166,7 @@ class FaultPlan:
             delay = float(r.integers(1, 400))
             for tx in out:
                 tx.time += delay
+                tx.fault_delay += delay     # stall-attribution bookkeeping
             self._inject("bridge", "dma_delay",
                          f"{tag}: +{delay:.0f} cycles min-issue", log)
         return out

@@ -129,12 +129,29 @@ class CellResult:
     faults: List[FaultEvent] = dataclasses.field(default_factory=list)
     # per-link Fig. 8 statistics when the cell ran on a FabricCluster
     links: Optional[Dict[str, CongestionResult]] = None
+    # data-movement profile (core/profiler.py) when the session ran with
+    # profile=True: per-channel stall attribution closing to bridge_time,
+    # exportable to Perfetto via SweepReport.save_traces
+    profile: Optional[Any] = None
 
     @property
     def link_stall(self) -> float:
         """Total modeled inter-device + host-channel stall cycles."""
         return sum(sum(r.per_engine_stall.values())
                    for r in (self.links or {}).values())
+
+    @property
+    def utilization(self) -> Optional[float]:
+        """Primary-channel link-bandwidth utilization (None unprofiled)."""
+        return (self.profile.utilization()
+                if self.profile is not None else None)
+
+    @property
+    def attribution(self) -> Optional[Dict[str, float]]:
+        """Stall-attribution cycles summed over the cell's channels
+        (None unprofiled)."""
+        return (self.profile.attribution()
+                if self.profile is not None else None)
 
 
 @dataclasses.dataclass
@@ -179,17 +196,43 @@ class SweepReport:
         }
 
     def to_rows(self) -> List[str]:
-        """CSV-ish rows for benchmark output."""
+        """CSV-ish rows for benchmark output.  The utilization and
+        per-category stall-attribution columns are filled when the session
+        ran with ``profile=True`` (core/profiler.py), "-" otherwise."""
+        from repro.core.profiler import CATEGORIES
         rows = ["cell,backend,devices,seconds,bridge_cycles,stall_cycles,"
-                "link_stall_cycles,status"]
+                "link_stall_cycles,utilization,"
+                + ",".join(f"{c}_cycles" for c in CATEGORIES) + ",status"]
         for r in self.cells:
             stall = (sum(r.congestion.per_engine_stall.values())
                      if r.congestion else 0.0)
             status = "error" if r.error else "ok"
+            if r.profile is not None:
+                att = r.attribution
+                prof_cols = (f"{r.utilization:.4f},"
+                             + ",".join(f"{att[c]:.0f}"
+                                        for c in CATEGORIES))
+            else:
+                prof_cols = "-," + ",".join("-" for _ in CATEGORIES)
             rows.append(f"{r.cell.op},{r.cell.backend},{r.cell.devices},"
                         f"{r.seconds:.3f},{r.bridge_time:.0f},{stall:.0f},"
-                        f"{r.link_stall:.0f},{status}")
+                        f"{r.link_stall:.0f},{prof_cols},{status}")
         return rows
+
+    def save_traces(self, out_dir) -> List[Any]:
+        """Write one Perfetto/Chrome-trace JSON per profiled cell under
+        ``out_dir`` (requires a ``profile=True`` session); returns the
+        written paths.  Load any of them at https://ui.perfetto.dev."""
+        from pathlib import Path
+        out = Path(out_dir)
+        paths = []
+        for r in self.cells:
+            if r.profile is None:
+                continue
+            fname = "".join(ch if ch.isalnum() or ch in "._-" else "_"
+                            for ch in r.cell.label) + ".trace.json"
+            paths.append(r.profile.save_perfetto(out / fname))
+        return paths
 
     def scaling(self) -> List[str]:
         """Cross-scale comparison rows: modeled cycles, link stalls, and
@@ -226,10 +269,16 @@ class CoVerifySession:
                  congestion: Optional[CongestionConfig] = None,
                  fault_plan: Optional[FaultPlan] = None,
                  fabric_firmware: Optional[Callable[..., None]] = None,
-                 link_config: Optional[CongestionConfig] = None) -> None:
+                 link_config: Optional[CongestionConfig] = None,
+                 profile: bool = False) -> None:
         self.firmware = firmware
         self.congestion = congestion
         self.fault_plan = fault_plan
+        # with ``profile`` every cell's bridge/cluster records op marks and
+        # CellResult.profile carries the data-movement profile
+        # (core/profiler.py): utilization + stall-attribution columns in
+        # to_rows, Perfetto export via SweepReport.save_traces
+        self.profile = profile
         # scale-out lane (core/fabric.py): when ``fabric_firmware`` is set,
         # or a cell carries devices > 1, the cell runs on a FabricCluster
         # with ``link_config`` fabric links; ``fabric_firmware(fab, op,
@@ -283,7 +332,8 @@ class CoVerifySession:
                 if cell.fault_plan is not None else None)
         if cell.devices > 1 or self.fabric_firmware is not None:
             return self._run_fabric_cell(cell, plan)
-        fb = FireBridge(congestion=cell.congestion, fault_plan=plan)
+        fb = FireBridge(congestion=cell.congestion, fault_plan=plan,
+                        profile=self.profile)
         fb.register_op(cell.op, **self._ops[cell.op])
         t0 = time.perf_counter()
         err: Optional[str] = None
@@ -301,6 +351,7 @@ class CoVerifySession:
             violations=list(fb.log.violations),
             error=err,
             faults=list(plan.events) if plan is not None else [],
+            profile=fb.profiler(cell.label) if self.profile else None,
         )
 
     def _run_fabric_cell(self, cell: SweepCell,
@@ -309,7 +360,8 @@ class CoVerifySession:
         ``cell.devices`` devices and the *host-visible gathered state* is
         what enters the cross-scale equivalence group."""
         fab = FabricCluster(cell.devices, congestion=cell.congestion,
-                            link_config=self.link_config, fault_plan=plan)
+                            link_config=self.link_config, fault_plan=plan,
+                            profile=self.profile)
         fab.register_op(cell.op, **self._ops[cell.op])
         fw = self.fabric_firmware or self.firmware
         t0 = time.perf_counter()
@@ -330,6 +382,7 @@ class CoVerifySession:
             error=err,
             faults=fab.fault_events(),
             links=fab.link_stats(),
+            profile=fab.profiler(cell.label) if self.profile else None,
         )
 
     def run(self, max_workers: Optional[int] = None,

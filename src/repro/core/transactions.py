@@ -7,10 +7,11 @@ heatmaps — the TPU-side analogue of FireBridge's AXI monitors.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 from collections import defaultdict
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -25,6 +26,44 @@ class Transaction:
     tag: str = ""
     stall: float = 0.0          # stall time injected by the congestion model
     complete: float = 0.0       # completion time (filled by congestion model)
+    # profiling attribution (core/profiler.py): the DoS component of
+    # ``stall`` (filled by the congestion arbiter) and the min-issue delay
+    # added by an injected dma_delay fault (filled by the fault plan).
+    # Never rendered into canonical lines — golden traces are unaffected.
+    dos: float = 0.0
+    fault_delay: float = 0.0
+
+
+@dataclasses.dataclass
+class OpMark:
+    """One profiled operation window: which slice of a ``TransactionLog``
+    (and which span of the modeled clock) belongs to one logical op — an
+    accelerator launch, a fabric collective leg, a serving tick.  Recorded
+    by the ``profile=`` hooks (bridge.py, fabric.py) and consumed by
+    ``core/profiler.py`` for per-op data-movement attribution (paper §IV,
+    Fig. 8)."""
+    op: str                     # "mm@oracle", "all_reduce", "scatter", ...
+    engine: str                 # owning engine/channel hint
+    t0: float                   # modeled clock at op entry
+    t1: float                   # modeled clock at op exit
+    tx_lo: int                  # first owned tx index in the log
+    tx_hi: int                  # one past the last owned tx index
+    meta: str = ""              # phase detail (e.g. "reduce_scatter[0]")
+
+
+@contextlib.contextmanager
+def record_mark(marks: List[OpMark], log: "TransactionLog",
+                now: Callable[[], float], op: str, engine: str = "",
+                meta: str = ""):
+    """THE op-mark recorder: capture the clock + log cursor around a
+    block and append one ``OpMark``.  Shared by the bridge's ``mark`` and
+    the fabric's ``_mark`` so the two cannot drift; callers gate on their
+    own ``profile`` flag (a disabled profiler never reaches here)."""
+    t0, lo = now(), len(log.txs)
+    try:
+        yield
+    finally:
+        marks.append(OpMark(op, engine, t0, now(), lo, len(log.txs), meta))
 
 
 def split_bursts(time: float, engine: str, kind: str, addr: int,

@@ -282,6 +282,14 @@ class ClusterServingEngine:
         (prompt uploads + token writebacks, all engines contending)."""
         return self.host_link.result()
 
+    def profiler(self, label: str = "cluster"):
+        """Data-movement profile of the cluster (core/profiler.py): the
+        shared host channel (where ``h->e*`` prompt uploads contend with
+        ``e*->h`` token writebacks — ``serving_rows`` splits them) plus
+        every device-local engine's DDR/CSR channels."""
+        from repro.core.profiler import DataMovementProfiler
+        return DataMovementProfiler(self, label=label)
+
     def congestion_stats(self) -> CongestionResult:
         return self.fabric_stats()
 

@@ -51,7 +51,8 @@ class ServingEngine:
                  prompt_pad: int = 16,
                  congestion: Optional[CongestionConfig] = None,
                  fault_plan=None,
-                 jit_fns=None):
+                 jit_fns=None,
+                 profile: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -59,6 +60,7 @@ class ServingEngine:
         self.flags = flags
         self.prompt_pad = prompt_pad
         self.congestion = congestion
+        self.profile = profile
 
         # `jit_fns` shares one (prefill, decode) executable pair across
         # device-local engines of a ClusterServingEngine — N devices, one
@@ -91,7 +93,8 @@ class ServingEngine:
         # control plane; with `congestion` the prompt/token DMA traffic is
         # arbitrated online through the shared-link model (paper §IV-C)
         self.mem = MemoryBridge(congestion=self.congestion,
-                                fault_plan=fault_plan)
+                                fault_plan=fault_plan,
+                                profile=self.profile)
         self.csr = RegisterFile("serve.csr", self.mem.log)
         self.csr.define("CTRL", CTRL)
         self.csr.define("STATUS", STATUS, access=RO)
@@ -233,6 +236,14 @@ class ServingEngine:
         """Fig. 8 stall statistics of the serving DMA traffic (None when
         the engine runs congestion-free)."""
         return self.mem.congestion_stats()
+
+    def profiler(self, label: str = "serving"):
+        """Data-movement profile of the serving DMA traffic
+        (core/profiler.py): prompt-upload vs token-writeback attribution
+        rides on the ``serve_dma`` read/write split
+        (``DataMovementProfiler.serving_rows``)."""
+        from repro.core.profiler import DataMovementProfiler
+        return DataMovementProfiler(self, label=label)
 
     # --------------------------------------------- checkpoint/restore hooks
     def get_state(self) -> dict:

@@ -1,0 +1,85 @@
+"""Docs-integrity suite: the `docs/` pages cannot drift from the tools.
+
+Two classes of checks, both run by the CI docs-integrity step:
+
+* **Transcript pinning** — fenced blocks introduced by a "prints
+  (deterministic ...)" sentinel are the VERBATIM output of a committed
+  example; this file pins the profiling walkthrough
+  (`examples/profile_cnn.py` ↔ docs/profiling.md) the same way
+  `tests/test_replay.py::test_docs_transcript_matches_example` pins the
+  time-travel walkthrough in docs/replay.md.
+* **Structure** — docs/index.md links every page of the suite, and every
+  relative markdown link in README.md and docs/*.md resolves to a real
+  file.
+"""
+import contextlib
+import importlib.util
+import io
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = ROOT / "docs"
+
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def _fenced_transcript(doc_path: Path, sentinel: str) -> list:
+    doc = doc_path.read_text().splitlines()
+    i = doc.index(sentinel)
+    start = doc.index("```", i) + 1
+    end = doc.index("```", start)
+    return doc[start:end]
+
+
+def test_profiling_docs_transcript(tmp_path):
+    """The worked profiling transcript in docs/profiling.md is the
+    verbatim output of examples/profile_cnn.py."""
+    expected = _fenced_transcript(
+        DOCS / "profiling.md",
+        "prints (deterministic — modeled cycles only, no wall time):")
+    spec = importlib.util.spec_from_file_location(
+        "profile_cnn", ROOT / "examples" / "profile_cnn.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        mod.main(["--trace-out", str(tmp_path / "profile_cnn.trace.json")])
+    assert buf.getvalue().splitlines() == expected
+    assert (tmp_path / "profile_cnn.trace.json").exists()
+
+
+def test_index_links_every_page():
+    index = (DOCS / "index.md").read_text()
+    pages = sorted(p.name for p in DOCS.glob("*.md") if p.name != "index.md")
+    assert pages, "docs suite is empty"
+    for page in pages:
+        assert f"({page})" in index, f"docs/index.md does not link {page}"
+
+
+_LINK = re.compile(r"\]\(([^)#]+?)(?:#[^)]*)?\)")
+
+
+def _relative_links(md: Path):
+    for target in _LINK.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        yield target
+
+
+def test_markdown_links_resolve():
+    missing = []
+    for md in [ROOT / "README.md"] + sorted(DOCS.glob("*.md")):
+        for target in _relative_links(md):
+            if not (md.parent / target).exists():
+                missing.append(f"{md.relative_to(ROOT)} -> {target}")
+    assert not missing, f"dangling markdown links: {missing}"
+
+
+def test_readme_maps_profiler():
+    readme = (ROOT / "README.md").read_text()
+    assert "core/profiler.py" in readme
+    assert "docs/profiling.md" in readme
+    # the old monolith links must have been rewired to the suite
+    assert "docs/index.md" in readme

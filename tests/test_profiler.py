@@ -1,0 +1,348 @@
+"""Off-chip data-movement profiler regression tests (core/profiler.py).
+
+The load-bearing properties, asserted rather than eyeballed:
+
+* **Closure** — on every committed golden-trace run and every profiled
+  `CoVerifySession` sweep cell, the six-category stall attribution sums
+  EXACTLY (bit-exact float equality) to the channel's modeled completion
+  time, and the single-device DDR channel's horizon IS `bridge.time`.
+* **Determinism** — same seed ⇒ byte-identical exported Perfetto JSON.
+* **Replay identity** — profiling a replayed `Recording` window equals
+  profiling the original run over that window; a full-range replay
+  exports an identical trace.
+* **Schema** — every exported trace validates against the documented
+  Chrome-trace event schema (`validate_trace`), including the in-file
+  closure check.
+"""
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from repro.core import (CATEGORIES, CongestionConfig, CoVerifySession,
+                        DataMovementProfiler, FabricCluster, FaultPlan,
+                        FireBridge, RooflinePlacement, profile_recording,
+                        profile_window, validate_trace)
+from repro.core import replay as rp
+from repro.kernels.systolic_matmul import ops as mm_ops
+from repro.kernels.systolic_matmul.sweep import (matmul_backends,
+                                                 matmul_fabric_firmware,
+                                                 matmul_firmware)
+
+import test_golden_traces as tg
+
+
+def _assert_closed(prof: DataMovementProfiler) -> None:
+    """The closure property: every channel's six categories sum
+    bit-exactly to its horizon, with non-negative cycles and a vanishing
+    internal transfer residual."""
+    assert prof.channels, "profiler resolved no channels"
+    for ch in prof.channels:
+        bd = ch.breakdown
+        assert set(bd.cycles) == set(CATEGORIES)
+        assert sum(bd.cycles.values()) == ch.horizon == bd.total, ch.name
+        assert all(v >= -1e-6 for v in bd.cycles.values()), (ch.name,
+                                                            bd.cycles)
+        assert ch.residual < 1e-3, (ch.name, ch.residual)
+
+
+# ------------------------------------------------------- golden-run closure
+@pytest.mark.parametrize("name", [tg._mark(n) for n in sorted(tg.TRACES)])
+def test_stall_attribution_closes_on_golden_runs(name):
+    """Acceptance gate: attribution closes on all four committed golden
+    traces' runs (single-device, fabric all_reduce, fault-active fuzz,
+    cluster-serving storm)."""
+    run = tg.TRACES[name]()
+    prof = DataMovementProfiler(run.recording.target, label=name)
+    _assert_closed(prof)
+    target = run.recording.target
+    if isinstance(target, FireBridge):
+        assert prof.channel("ddr").horizon == target.mem.time
+    errs = validate_trace(prof.to_perfetto())
+    assert errs == [], errs
+
+
+# ------------------------------------------------------------- determinism
+def _profiled_run(profile: bool = True) -> FireBridge:
+    fb = FireBridge(congestion=CongestionConfig(dos_prob=0.05, seed=7),
+                    fault_plan=FaultPlan(3), profile=profile)
+    fb.register_op("mm", **matmul_backends(tile=16, jit=False))
+    matmul_firmware(fb, "mm", "oracle", size=32, tile=16)
+    matmul_firmware_second(fb)
+    return fb
+
+
+def matmul_firmware_second(fb) -> None:
+    """A second launch on the same bridge (distinct buffer names) so the
+    profiled stream covers multiple op marks."""
+    rng = np.random.default_rng(48)
+    a = rng.normal(size=(48, 48)).astype(np.float32)
+    fb.mem.alloc("a2", a.shape, np.float32)
+    fb.mem.alloc("c2", (48, 48), np.float32)
+    fb.mem.host_write("a2", a)
+    fb.launch("mm", "oracle", ["a2", "a2"], ["c2"],
+              burst_list=lambda: mm_ops.transactions(
+                  48, 48, 48, bm=16, bn=16, bk=16, dtype_bytes=4))
+
+
+def test_export_deterministic(tmp_path):
+    """Same seed ⇒ byte-identical exported trace JSON."""
+    p1 = _profiled_run().profiler().save_perfetto(tmp_path / "a.json")
+    p2 = _profiled_run().profiler().save_perfetto(tmp_path / "b.json")
+    assert p1.read_bytes() == p2.read_bytes()
+    assert p1.read_bytes().endswith(b"\n")
+
+
+def test_op_marks_and_engine_rows():
+    fb = _profiled_run()
+    prof = fb.profiler()
+    _assert_closed(prof)
+    ops = [m.op for _, m in prof.marks]
+    assert ops == ["mm@oracle", "mm@oracle"]
+    # every marked range owns at least the launch's read+write bursts
+    assert all(m.tx_hi > m.tx_lo for _, m in prof.marks)
+    rows = prof.op_rows()
+    assert rows[0].startswith("op,meta,transactions,bytes")
+    assert len(rows) == 3
+    # per-engine stall matches the legacy Fig. 8 readout exactly
+    res = fb.congestion_stats()
+    ddr = prof.channel("ddr")
+    for e, s in ddr.engines.items():
+        assert s.stall == res.per_engine_stall[e]
+        assert s.busy == res.per_engine_busy[e]
+    assert ddr.utilization == res.link_utilization
+    assert ddr.horizon == res.makespan == fb.mem.time
+
+
+def test_fault_delay_attributed():
+    """Injected dma_delay faults surface in the fault_delay category (and
+    nowhere else classifies them)."""
+    fb = _profiled_run()
+    ddr = fb.profiler().channel("ddr")
+    injected = [e for e in fb.mem.fault_plan.events if e.kind == "dma_delay"]
+    if injected:                 # seed-dependent but stable: seed 3 injects
+        assert ddr.breakdown.cycles["fault_delay"] > 0
+    assert sum(s.fault_delay for s in ddr.engines.values()) > 0
+
+
+# ------------------------------------------------------ fast path + schema
+def test_fast_path_closure_and_schema():
+    fb = FireBridge(profile=True)
+    fb.register_op("mm", **matmul_backends(tile=16, jit=False))
+    matmul_firmware(fb, "mm", "oracle", size=32, tile=16)
+    prof = fb.profiler()
+    _assert_closed(prof)
+    ddr = prof.channel("ddr")
+    assert ddr.kind == "clock"
+    assert ddr.horizon == fb.mem.time
+    assert validate_trace(prof.to_perfetto()) == []
+
+
+def test_validate_trace_rejects_bad_traces():
+    good = _profiled_run().profiler().to_perfetto()
+    assert validate_trace(good) == []
+    broken = json.loads(json.dumps(good))
+    del broken["traceEvents"][0]["name"]
+    assert any("missing" in e for e in validate_trace(broken))
+    skewed = json.loads(json.dumps(good))
+    skewed["otherData"]["attribution"]["ddr"]["transfer"] += 1.0
+    assert any("sums to" in e for e in validate_trace(skewed))
+    assert any("top-level" in e for e in validate_trace({"traceEvents": []}))
+
+
+# --------------------------------------------------------- fabric profiling
+def test_fabric_profile_ports_and_leg_attribution():
+    fab = FabricCluster(4, profile=True,
+                        link_config=CongestionConfig(
+                            link_bytes_per_cycle=64.0, base_latency=100.0,
+                            dos_prob=0.05, seed=11))
+    for i in range(4):
+        fab.devices[i].mem.alloc("g", (16, 16), np.float32)
+        fab.devices[i].mem.host_write(
+            "g", np.full((16, 16), float(i + 1), np.float32))
+    fab.all_reduce("g")
+    prof = fab.profiler()
+    _assert_closed(prof)
+    names = [c.name for c in prof.channels]
+    assert "fabric/host" in names
+    assert all(f"fabric/port{i}" in names for i in range(4))
+    legs = [(m.op, m.meta) for _, m in prof.marks]
+    assert legs == [("all_reduce", f"{phase}[{s}]")
+                    for phase in ("reduce_scatter", "all_gather")
+                    for s in range(3)]
+    # ring legs carry nonzero traffic and port contention shows up
+    rows = prof.op_rows()
+    assert len(rows) == 7
+    assert all(int(r.split(",")[3]) > 0 for r in rows[1:])
+    assert validate_trace(prof.to_perfetto()) == []
+
+
+# ------------------------------------------------------- recording profiling
+def _recorded_bridge():
+    table = matmul_backends(tile=16, jit=False)
+
+    def factory():
+        fb = FireBridge(congestion=CongestionConfig(dos_prob=0.05, seed=7),
+                        fault_plan=FaultPlan(3))
+        fb.register_op("mm", **table)
+        return fb
+
+    def program(rec):
+        for j, size in enumerate([32, 48, 32, 64]):
+            rng = np.random.default_rng(size * 7 + j)
+            a = rng.normal(size=(size, size)).astype(np.float32)
+            rec.do("alloc", f"a{j}", a.shape, np.float32)
+            rec.do("alloc", f"c{j}", (size, size), np.float32)
+            rec.do("host_write", f"a{j}", a)
+            rec.do("launch", "mm", "oracle", (f"a{j}", f"a{j}"),
+                   (f"c{j}",), "mm",
+                   (lambda s=size: mm_ops.transactions(
+                       s, s, s, bm=16, bn=16, bk=16, dtype_bytes=4)), {})
+
+    sess = rp.DebugSession(factory, checkpoint_interval=4, label="prof")
+    return sess, sess.record(program)
+
+
+def test_profile_recording_matches_original():
+    """Full-range replay profiles byte-identically to the original run."""
+    sess, rec = _recorded_bridge()
+    orig = DataMovementProfiler(rec.target, label="prof")
+    replayed = profile_recording(sess, rec)
+    _assert_closed(replayed)
+    a = json.dumps(orig.to_perfetto(), sort_keys=True)
+    b = json.dumps(replayed.to_perfetto(), sort_keys=True)
+    assert a == b
+
+
+def test_profile_window_replay_identity():
+    """Profiling a replayed window equals profiling the original run over
+    that window — for every checkpoint-aligned and unaligned window."""
+    sess, rec = _recorded_bridge()
+    for lo, hi in [(0, rec.n_ops), (5, 12), (3, 9), (10, rec.n_ops)]:
+        w = sess.replay(rec, lo, hi)
+        want = profile_window(rec.target, rec, lo, hi)
+        got = profile_window(w.target, rec, lo, hi)
+        assert got == want, (lo, hi)
+    assert profile_window(rec.target, rec, 0, rec.n_ops)
+
+
+# ------------------------------------------------------------ sweep wiring
+def test_sweep_cells_close_and_report_columns(tmp_path):
+    sess = CoVerifySession(matmul_firmware,
+                           congestion=CongestionConfig(dos_prob=0.02,
+                                                       seed=5),
+                           fault_plan=FaultPlan(9), profile=True)
+    sess.register_op("mm", **matmul_backends(tile=32))
+    sess.add_sweep("mm", ("oracle", "interpret"), [{"size": 64}])
+    rep = sess.run(max_workers=2)
+    assert rep.passed, rep.summary()
+    for r in rep.cells:
+        assert r.profile is not None
+        _assert_closed(r.profile)
+        assert r.profile.channel("ddr").horizon == r.bridge_time
+        assert 0.0 < r.utilization <= 1.0
+        assert sum(r.attribution.values()) > 0
+    rows = rep.to_rows()
+    assert "utilization" in rows[0]
+    for c in CATEGORIES:
+        assert f"{c}_cycles" in rows[0]
+    assert "-" not in rows[1].split(",")        # profiled: columns filled
+    paths = rep.save_traces(tmp_path)
+    assert len(paths) == 2
+    for p in paths:
+        assert validate_trace(json.loads(p.read_text())) == []
+
+
+def test_unprofiled_sweep_keeps_dash_columns():
+    sess = CoVerifySession(matmul_firmware)
+    sess.register_op("mm", **matmul_backends(tile=32))
+    sess.add_cell("mm", "oracle", {"size": 64})
+    rep = sess.run(max_workers=1)
+    assert rep.passed
+    (r,) = rep.cells
+    assert r.profile is None and r.utilization is None
+    assert ",-," in rep.to_rows()[1]
+    assert rep.save_traces("unused") == []
+
+
+@pytest.mark.slow
+def test_fabric_sweep_cells_close():
+    link = CongestionConfig(link_bytes_per_cycle=64.0, base_latency=100.0)
+    sess = CoVerifySession(matmul_firmware,
+                           fabric_firmware=matmul_fabric_firmware,
+                           link_config=link, profile=True)
+    sess.register_op("mm", **matmul_backends(tile=32))
+    sess.add_sweep("mm", ("oracle",), [{"size": 64}], devices=(1, 2, 4))
+    rep = sess.run(max_workers=2)
+    assert rep.passed, rep.summary()
+    for r in rep.cells:
+        _assert_closed(r.profile)
+        # the cell's modeled completion time is the slowest channel
+        assert max(c.horizon for c in r.profile.channels) == r.bridge_time
+
+
+# ---------------------------------------------------------- serving profile
+@pytest.mark.slow
+def test_serving_profiler_splits_upload_vs_writeback():
+    from repro.core.fuzz import _default_engine
+    eng = _default_engine()
+    try:
+        for rid, n in ((0, 6), (1, 9)):
+            prompt = np.arange(n, dtype=np.int32) + 1
+            eng.mem.buffers["prompt_in"].array[:n] = prompt
+            eng.csr.fb_write_32(eng.csr.addr_of("SUBMIT_ID"), rid)
+            eng.csr.fb_write_32(eng.csr.addr_of("SUBMIT_LEN"), n)
+            eng.csr.fb_write_32(eng.csr.addr_of("SUBMIT_MAXNEW"), 3)
+            eng.csr.fb_write_32(eng.csr.addr_of("DOORBELL"), 1)
+        eng.run_until_done()
+        prof = eng.profiler()
+        _assert_closed(prof)
+        rows = prof.serving_rows()
+        by = {r.split(",")[0]: r.split(",") for r in rows[1:]}
+        assert int(by["prompt_upload"][2]) > 0
+        assert int(by["token_writeback"][2]) > 0
+        assert int(by["prompt_upload"][1]) == 2      # one read per submit
+        assert int(by["token_writeback"][1]) == 2    # one row per retire
+        assert validate_trace(prof.to_perfetto()) == []
+    finally:
+        eng.reset()
+
+
+# ---------------------------------------------------------------- roofline
+def test_roofline_placement_terms():
+    pl = RooflinePlacement("k", {"compute": 2.0, "memory": 4.0}, ideal_s=1.0)
+    assert pl.dominant == "memory"
+    assert pl.limit_s == 4.0
+    assert pl.roofline_frac == 0.25
+    assert RooflinePlacement("z", {"compute": 0.0}).roofline_frac == 0.0
+
+
+def test_profiler_roofline_uses_marked_bytes():
+    fb = _profiled_run()
+    prof = fb.profiler()
+    pts = prof.roofline({"mm@oracle": 1e6}, peak_flops=1e9, mem_bw=1e8)
+    assert len(pts) == 2
+    for pt in pts:
+        assert pt.terms["memory"] > 0
+        assert pt.dominant in ("compute", "memory")
+
+
+# ---------------------------------------------------------------- benchmark
+@pytest.mark.slow
+def test_bench_profiler_quick_mode():
+    """The overhead gate: < 10% wall-clock with profiling enabled on the
+    200-launch fuzz workload (asserted inside run()), plus a valid
+    exported artifact."""
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    from benchmarks.bench_profiler import ART, run
+    rows = run(quick=True)
+    assert rows[0].startswith("case,")
+    by = {r.split(",")[0]: r.split(",") for r in rows[1:]}
+    assert float(by["profile_on"][4]) < 10.0
+    trace = json.loads((ART / "profiler_trace.json").read_text())
+    assert validate_trace(trace) == []

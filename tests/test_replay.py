@@ -415,7 +415,7 @@ def test_bench_replay_quick_mode():
 
 # ----------------------------------------------------------------- docs
 def test_docs_transcript_matches_example():
-    """The worked bisection transcript in docs/architecture.md is the
+    """The worked bisection transcript in docs/replay.md is the
     VERBATIM output of examples/time_travel_debug.py — docs cannot drift
     from the tool."""
     import contextlib
@@ -424,7 +424,7 @@ def test_docs_transcript_matches_example():
     from pathlib import Path
 
     root = Path(__file__).resolve().parents[1]
-    doc = (root / "docs" / "architecture.md").read_text().splitlines()
+    doc = (root / "docs" / "replay.md").read_text().splitlines()
     sentinel = ("prints (deterministic — modeled clocks and seeded "
                 "faults, no wall time):")
     i = doc.index(sentinel)
