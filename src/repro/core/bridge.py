@@ -34,8 +34,8 @@ import numpy as np
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
 from repro.core.registers import RegisterFile
-from repro.core.transactions import (OpMark, Transaction, TransactionLog,
-                                     record_mark, split_bursts)
+from repro.core.transactions import (BurstBatch, OpMark, Transaction,
+                                     TransactionLog, record_mark)
 
 
 @dataclasses.dataclass
@@ -123,25 +123,37 @@ class MemoryBridge:
 
     # ------------------------------------------------ device-side access
     def _dev_bursts(self, buf: Buffer, kind: str, engine: str,
-                    tag: str) -> List[Transaction]:
-        """Split one device transfer into link-level bursts (§IV-C)."""
+                    tag: str) -> BurstBatch:
+        """Split one device transfer into link-level bursts (§IV-C) —
+        built as a column batch, not per-burst Transaction objects."""
         step = self.congestion.max_burst_bytes if self.congestion else 0
-        return split_bursts(self.time, engine, kind, buf.addr, buf.nbytes,
-                            tag, step)
+        return BurstBatch.from_transfer(self.time, engine, kind, buf.addr,
+                                        buf.nbytes, tag, step)
 
-    def _submit(self, bursts: List[Transaction]) -> None:
+    def _submit(self, batch: BurstBatch) -> None:
         """Route one burst batch through the link (or the fast path),
         applying any fault-plan perturbation first."""
         if self.fault_plan is not None:
-            bursts = self.fault_plan.perturb_bursts(bursts, self.log)
+            batch = self.fault_plan.perturb_batch(batch, self.log)
         if self.link is not None:
-            self.time = self.link.submit(bursts, self.log)
+            self.time = self.link.submit_batch(batch, self.log)
             return
-        for tx in bursts:
-            # logical clock; a delayed burst's min-issue time still holds
-            self.time = max(self.time + 1, tx.time)
-            tx.time = self.time
-            self.log.log(tx)
+        self.time = self._fast_clock(batch, self.time)
+
+    def _fast_clock(self, batch: BurstBatch, t: float) -> float:
+        """Congestion-free logical clock over a batch: one cycle per
+        burst; a delayed burst's min-issue time still holds.  Same
+        float-op order as the per-object loop it replaces."""
+        times = batch.rec["time"].tolist()
+        out = [0.0] * len(times)
+        for i, ti in enumerate(times):
+            tn = t + 1
+            t = tn if tn >= ti else ti
+            out[i] = t
+        if times:
+            batch.rec["time"] = out
+            self.log.log_batch(batch)
+        return t
 
     def dev_read(self, name: str, engine: str = "dma") -> np.ndarray:
         """Accelerator-side read: transaction-logged, congestion-timed.
@@ -183,18 +195,13 @@ class MemoryBridge:
         (Fig. 8) — and ``self.time`` advances to the batch makespan.
         """
         t = self.time if base_time is None else base_time
-        batch = [Transaction(t, engine, kind, addr, nbytes)
-                 for engine, kind, addr, nbytes in txs]
+        batch = BurstBatch.from_tuples(t, txs)
         if self.fault_plan is not None:
-            batch = self.fault_plan.perturb_bursts(batch, self.log)
+            batch = self.fault_plan.perturb_batch(batch, self.log)
         if self.link is not None:
-            self.time = self.link.submit(batch, self.log)
+            self.time = self.link.submit_batch(batch, self.log)
             return
-        for tx in batch:
-            t = max(t + 1, tx.time)
-            tx.time = t
-            self.log.log(tx)
-        self.time = t
+        self.time = self._fast_clock(batch, t)
 
     def congestion_stats(self) -> Optional[CongestionResult]:
         """Fig. 8 statistics accumulated by the online link so far

@@ -21,6 +21,12 @@ Two entry points share one arbitration core:
 Feeding a stream to ``simulate`` and submitting the same stream as a single
 ``LinkModel.submit`` batch produce identical timing — they are the same
 loop (see tests/test_core_bridge.py::test_online_matches_offline_replay).
+
+Arbitration is vectorized (docs/performance.md): grant order is computed
+in closed form per round-robin phase, DoS draws and transfer latencies in
+one numpy pass per batch, and only the serial timing recurrence remains a
+(lean) Python loop — bit-identical to the retained ``_submit_scalar``
+reference, witnessed by the differential tier (tests/test_simspeed.py).
 """
 from __future__ import annotations
 
@@ -31,7 +37,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.transactions import Transaction, TransactionLog
+from repro.core.transactions import BurstBatch, Transaction, TransactionLog
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +122,14 @@ class LinkModel:
     identical to the paper's interconnect arbiter; per-engine program order
     is always preserved.  Mutates each transaction's ``stall``/``complete``
     fields in place.
+
+    Three submission paths, one arbitration semantics:
+
+    * ``_submit_scalar`` — the original per-burst Python loop, retained
+      verbatim as the differential reference (tests/test_simspeed.py).
+    * ``submit`` — the vectorized object path over ``List[Transaction]``.
+    * ``submit_batch`` — the array path over a ``BurstBatch``; appends the
+      arbitrated batch as a lazy segment to the timeline and the log.
     """
 
     def __init__(self, cfg: CongestionConfig) -> None:
@@ -128,21 +142,32 @@ class LinkModel:
         self._stall: Dict[str, float] = defaultdict(float)
         self._total_bytes = 0
         self._rr = 0
-        self.timeline: List[Transaction] = []
+        self._timeline: List[Transaction] = []
+        self._tl_pending: List[BurstBatch] = []
 
     @property
     def now(self) -> float:
         """Link-free horizon: completion time of the last transfer."""
         return self._link_free
 
-    def submit(self, txs: List[Transaction],
-               log: Optional[TransactionLog] = None) -> float:
-        """Arbitrate one batch of transactions through the shared link.
+    @property
+    def timeline(self) -> List[Transaction]:
+        """Arbitration-order transaction timeline.  Batch-submitted
+        segments materialize on first read (profiler/result paths); the
+        hot path appends lazily."""
+        if self._tl_pending:
+            for b in self._tl_pending:
+                self._timeline.extend(b.materialize())
+            self._tl_pending.clear()
+        return self._timeline
 
-        Transactions must be in per-engine program order; ``time`` fields
-        are minimum issue times (0 = ASAP).  Returns the completion time of
-        the last transaction in the batch.
-        """
+    # ------------------------------------------------------- scalar reference
+    def _submit_scalar(self, txs: List[Transaction],
+                       log: Optional[TransactionLog] = None) -> float:
+        """The original per-burst arbitration loop, retained verbatim as
+        the bit-exactness reference for the vectorized paths.  Semantics
+        documentation lives here: ``submit``/``submit_batch`` must match
+        this loop's output (and RNG/rr side effects) exactly."""
         cfg = self.cfg
         queues: Dict[str, List[Transaction]] = defaultdict(list)
         for t in txs:
@@ -180,6 +205,234 @@ class LinkModel:
                 log.log(tx)
         return last
 
+    # ------------------------------------------------------ vectorized core
+    def _grant_order(self, n: int,
+                     by_eng: Dict[str, List[int]]) -> Optional[np.ndarray]:
+        """Grant order for one batch as source indices, advancing the
+        round-robin pointer exactly as the scalar loop does.
+
+        Grant order is timing-independent (priority, round-robin pointer,
+        and per-engine queue lengths fully determine it), so it can be
+        computed in closed form: within a candidate set of size ``k`` at
+        round-robin phase ``r``, the engine at position ``p`` is granted
+        at steps ``(p - r) % k, +k, +2k, ...`` until the first engine
+        empties, which ends the phase.  Returns None for the single-engine
+        fast path (grant order = program order; note the scalar loop still
+        advances ``_rr`` once per grant even then)."""
+        prio = self._prio
+        if len(by_eng) == 1:
+            self._rr += n
+            return None
+        engines = sorted(by_eng, key=lambda e: (-prio.get(e, 0), e))
+        order = np.empty(n, dtype=np.int64)
+        base = 0
+        rr = self._rr
+        gi = 0
+        while gi < len(engines):
+            # one priority group at a time, strictly descending
+            p0 = prio.get(engines[gi], 0)
+            gj = gi
+            while gj < len(engines) and prio.get(engines[gj], 0) == p0:
+                gj += 1
+            group = engines[gi:gj]
+            gi = gj
+            rem = [len(by_eng[e]) for e in group]
+            cons = [0] * len(group)
+            cand = list(range(len(group)))
+            while cand:
+                k = len(cand)
+                r = rr % k
+                # phase length: steps until the first candidate empties
+                best = None
+                for pos, ci in enumerate(cand):
+                    s_p = (pos - r) % k
+                    end = s_p + (rem[ci] - 1) * k
+                    if best is None or end < best:
+                        best = end
+                L = best + 1
+                nxt = []
+                for pos, ci in enumerate(cand):
+                    s_p = (pos - r) % k
+                    g = 0 if L <= s_p else (L - 1 - s_p) // k + 1
+                    if g:
+                        ids = by_eng[group[ci]]
+                        order[base + s_p: base + s_p + g * k: k] = \
+                            ids[cons[ci]:cons[ci] + g]
+                        cons[ci] += g
+                        rem[ci] -= g
+                    if rem[ci]:
+                        nxt.append(ci)
+                base += L
+                rr += L
+                cand = nxt
+        self._rr = rr
+        return order
+
+    def _dos_draws(self, n: int) -> Optional[List[float]]:
+        """One DoS draw per grant, in grant order — ``Generator.random(n)``
+        consumes the bit stream identically to n scalar ``random()`` calls,
+        so the RNG state matches the scalar loop after every batch."""
+        cfg = self.cfg
+        if cfg.dos_prob <= 0:
+            return None
+        hits = self._rng.random(n) < cfg.dos_prob
+        if not hits.any():
+            return None     # all-zero stalls: callers may skip the column
+        return np.where(hits, cfg.dos_stall, 0.0).tolist()
+
+    def submit(self, txs: List[Transaction],
+               log: Optional[TransactionLog] = None) -> float:
+        """Arbitrate one batch of transactions through the shared link.
+
+        Transactions must be in per-engine program order; ``time`` fields
+        are minimum issue times (0 = ASAP).  Returns the completion time of
+        the last transaction in the batch.
+
+        Vectorized object path: grant order + DoS draws + transfer
+        latencies are computed per batch; the serial timing recurrence
+        (each burst's start depends on the previous completion) runs over
+        plain floats in the exact scalar FP-operation order, so results
+        are bit-identical to ``_submit_scalar``.
+        """
+        cfg = self.cfg
+        n = len(txs)
+        if n == 0:
+            return self._link_free
+        by_eng: Dict[str, List[int]] = {}
+        for i, t in enumerate(txs):
+            e = t.engine
+            if e in by_eng:
+                by_eng[e].append(i)
+            else:
+                by_eng[e] = [i]
+        order = self._grant_order(n, by_eng)
+        granted = list(txs) if order is None \
+            else [txs[i] for i in order.tolist()]
+        dos_l = self._dos_draws(n) or [0.0] * n
+        xfer_l = (cfg.base_latency +
+                  np.array([t.nbytes for t in granted], dtype=np.float64)
+                  / cfg.link_bytes_per_cycle).tolist()
+        link_free = self._link_free
+        gap = cfg.per_engine_issue_gap
+        ready, busy, stall_acc = self._ready, self._busy, self._stall
+        total = 0
+        for i, tx in enumerate(granted):
+            e = tx.engine
+            r = ready[e]
+            t = tx.time
+            issue = r if r >= t else t
+            start = issue if issue >= link_free else link_free
+            d = dos_l[i]
+            x = xfer_l[i]
+            st = (start - issue) + d
+            comp = start + d + x
+            tx.stall = st
+            tx.dos = d
+            tx.complete = comp
+            link_free = comp
+            ready[e] = comp + gap
+            busy[e] += x
+            stall_acc[e] += st
+            total += tx.nbytes
+        self._link_free = link_free
+        self._total_bytes += total
+        self.timeline.extend(granted)
+        if log is not None:
+            log.extend(granted)
+        return link_free
+
+    def submit_batch(self, batch: BurstBatch,
+                     log: Optional[TransactionLog] = None) -> float:
+        """Array path: arbitrate one ``BurstBatch`` through the link.
+
+        Same semantics as ``submit`` but end-to-end over columns — the
+        batch is permuted into grant order in place, the recurrence runs
+        over plain floats pulled from the columns, results are written
+        back per column, and the batch is appended as a *lazy* segment to
+        the timeline and ``log`` (shared, so materialized Transaction
+        objects alias between the two exactly as object submission does).
+        Returns the completion time of the last burst.
+        """
+        cfg = self.cfg
+        n = len(batch)
+        if n == 0:
+            return self._link_free
+        eng = batch.engine
+        if len(set(eng)) == 1:
+            # single-engine fast path — same rr bookkeeping as the scalar
+            # loop (one advance per grant) without the index-map build
+            self._rr += n
+        else:
+            by_eng: Dict[str, List[int]] = {}
+            for i, e in enumerate(eng):
+                if e in by_eng:
+                    by_eng[e].append(i)
+                else:
+                    by_eng[e] = [i]
+            order = self._grant_order(n, by_eng)
+            if order is not None:
+                batch.permute(order)
+                eng = batch.engine
+        rec = batch.rec
+        dos_l = self._dos_draws(n)
+        # transfer latency over plain floats: same IEEE ops per element as
+        # the numpy column expression, cheaper at real batch sizes
+        lbpc = cfg.link_bytes_per_cycle
+        bl = cfg.base_latency
+        nb_l = rec["nbytes"].tolist()
+        xfer_l = [bl + nb / lbpc for nb in nb_l]
+        times_l = rec["time"].tolist()
+        link_free = self._link_free
+        gap = cfg.per_engine_issue_gap
+        ready, busy, stall_acc = self._ready, self._busy, self._stall
+        stall_l = [0.0] * n
+        comp_l = [0.0] * n
+        if dos_l is None:
+            for i in range(n):
+                e = eng[i]
+                r = ready[e]
+                t = times_l[i]
+                issue = r if r >= t else t
+                start = issue if issue >= link_free else link_free
+                x = xfer_l[i]
+                st = start - issue
+                comp = start + x
+                stall_l[i] = st
+                comp_l[i] = comp
+                link_free = comp
+                ready[e] = comp + gap
+                busy[e] += x
+                stall_acc[e] += st
+        else:
+            for i in range(n):
+                e = eng[i]
+                r = ready[e]
+                t = times_l[i]
+                issue = r if r >= t else t
+                start = issue if issue >= link_free else link_free
+                d = dos_l[i]
+                x = xfer_l[i]
+                st = (start - issue) + d
+                comp = start + d + x
+                stall_l[i] = st
+                comp_l[i] = comp
+                link_free = comp
+                ready[e] = comp + gap
+                busy[e] += x
+                stall_acc[e] += st
+            rec["dos"] = dos_l
+        rec["stall"] = stall_l
+        rec["complete"] = comp_l
+        self._link_free = link_free
+        self._total_bytes += sum(nb_l)
+        # lazy append: ordering vs already-materialized entries is safe
+        # because every object-path extend goes through the flushing
+        # ``timeline`` property first
+        self._tl_pending.append(batch)
+        if log is not None:
+            log.log_batch(batch)
+        return link_free
+
     # --------------------------------------------- checkpoint/restore hooks
     def get_state(self) -> dict:
         """Snapshot of the arbiter for a replay checkpoint
@@ -212,7 +465,8 @@ class LinkModel:
         # restored entries are aliased, not re-copied: transactions are
         # immutable once arbitrated (mutation happens pre-submit), and the
         # restore path is the replay hot loop
-        self.timeline[:] = state["timeline"]
+        self._tl_pending.clear()
+        self._timeline[:] = state["timeline"]
 
     def result(self) -> CongestionResult:
         """Snapshot the Fig. 8 statistics accumulated so far."""

@@ -41,8 +41,8 @@ import numpy as np
 from repro.core.bridge import FireBridge, MemoryBridge
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
-from repro.core.transactions import (OpMark, Transaction, TransactionLog,
-                                     record_mark, split_bursts)
+from repro.core.transactions import (BurstBatch, OpMark, Transaction,
+                                     TransactionLog, record_mark)
 
 # Default fabric-link parameters: an inter-device serdes link is narrower
 # and longer-latency than the device-local DDR interface modeled by the
@@ -162,29 +162,48 @@ class FabricCluster:
             self._dev_alloc(i, name, sh, dtype)
 
     # --------------------------------------------------------------- links
-    def _submit(self, link: LinkModel, engine: str, kind: str, addr: int,
-                nbytes: int, tag: str,
-                runs: Optional[List[Tuple[int, int]]] = None) -> float:
-        """One fabric transfer leg: burst-split, fault-perturbed,
-        congestion-arbitrated, transaction-logged.  ``runs`` overrides the
+    def _leg(self, link: LinkModel, engine: str, kind: str, addr: int,
+             nbytes: int, tag: str,
+             runs: Optional[List[Tuple[int, int]]] = None
+             ) -> Optional[Tuple[LinkModel, BurstBatch]]:
+        """Build one fabric transfer leg as a burst batch — no submission
+        yet.  A launch's legs are all built against the same fabric clock
+        (``self.time`` only advances after the issuing op's leg loop) and
+        then issued together by ``_issue_legs``.  ``runs`` overrides the
         single contiguous (addr, nbytes) range with a list of strided
-        byte runs (inner-axis shards of a host buffer)."""
-        step = self.link_config.max_burst_bytes
-        bursts: List[Transaction] = []
-        for a, nb in (runs if runs is not None else [(addr, nbytes)]):
-            if nb <= 0:         # empty shard: nothing moves, no burst
-                continue        # (matches all_reduce's degenerate skip)
-            bursts += split_bursts(self.time, engine, kind, a, nb, tag,
-                                   step)
-        if not bursts:
-            return self.time
-        if self.fault_plan is not None:
-            bursts = self.fault_plan.perturb_bursts(bursts, self.log)
-        done = link.submit(bursts, self.log)
-        if self.coverage is not None:
-            for tx in bursts:
-                self.coverage.hit_burst(tx.nbytes)
-                self.coverage.hit_congestion(tx.stall)
+        byte runs (inner-axis shards of a host buffer).  Returns None for
+        an empty leg (nothing moves, no burst, no fault draw — matches
+        all_reduce's degenerate skip)."""
+        rl = [(a, nb) for a, nb in (runs if runs is not None
+                                    else [(addr, nbytes)]) if nb > 0]
+        if not rl:
+            return None
+        return (link, BurstBatch.from_runs(
+            self.time, engine, kind, rl, tag,
+            self.link_config.max_burst_bytes))
+
+    def _issue_legs(self, legs: List[Optional[Tuple[LinkModel, BurstBatch]]]
+                    ) -> float:
+        """Issue one launch's legs in build order: each leg's batch is
+        fault-perturbed, arbitrated on its own link, and logged.  Per-link
+        submission order and batch boundaries are identical to per-leg
+        issuing, so arbitration streams (and golden traces) are unchanged
+        — only the Python orchestration is batched."""
+        done = self.time
+        for leg in legs:
+            if leg is None:
+                continue
+            link, batch = leg
+            if self.fault_plan is not None:
+                batch = self.fault_plan.perturb_batch(batch, self.log)
+            d = link.submit_batch(batch, self.log)
+            if d > done:
+                done = d
+            if self.coverage is not None:
+                for nb, st in zip(batch.rec["nbytes"].tolist(),
+                                  batch.rec["stall"].tolist()):
+                    self.coverage.hit_burst(nb)
+                    self.coverage.hit_congestion(st)
         return done
 
     def _cover(self, op: str) -> None:
@@ -211,11 +230,11 @@ class FabricCluster:
                                sbuf.array.dtype)
         eng = f"d{src_dev}->d{dst_dev}"
         with self._mark("dev_copy", name):
-            done = max(
-                self._submit(self.ports[src_dev], eng, "read", sbuf.addr,
-                             sbuf.nbytes, name),
-                self._submit(self.ports[dst_dev], eng, "write", dbuf.addr,
-                             dbuf.nbytes, dst_name))
+            done = self._issue_legs([
+                self._leg(self.ports[src_dev], eng, "read", sbuf.addr,
+                          sbuf.nbytes, name),
+                self._leg(self.ports[dst_dev], eng, "write", dbuf.addr,
+                          dbuf.nbytes, dst_name)])
             self.time = max(self.time, done)
         np.copyto(dbuf.array, sbuf.array)
         self._cover("dev_copy")
@@ -239,19 +258,21 @@ class FabricCluster:
         hbuf = self.host.buffers[name]
         shards = np.array_split(hbuf.array, self.n, axis=axis)
         bounds = self._shard_bounds(hbuf.array.shape[axis])
-        done = self.time
         with self._mark("scatter", name):
+            legs, moves = [], []
             for i, (sh, (lo, hi)) in enumerate(zip(shards, bounds)):
                 buf = self._dev_alloc(i, name, sh.shape, hbuf.array.dtype)
                 eng = f"h->d{i}"
                 runs = [(hbuf.addr + off, nb) for off, nb in
                         shard_runs(hbuf.array.shape, hbuf.array.itemsize,
                                    axis, lo, hi)]
-                done = max(done,
-                           self._submit(self.host_link, eng, "read", 0, 0,
-                                        name, runs=runs),
-                           self._submit(self.ports[i], eng, "write",
-                                        buf.addr, sh.nbytes, name))
+                legs.append(self._leg(self.host_link, eng, "read", 0, 0,
+                                      name, runs=runs))
+                legs.append(self._leg(self.ports[i], eng, "write",
+                                      buf.addr, sh.nbytes, name))
+                moves.append((buf, sh))
+            done = self._issue_legs(legs)
+            for buf, sh in moves:
                 np.copyto(buf.array, sh)
             self.time = max(self.time, done)
         self._cover("scatter")
@@ -261,17 +282,19 @@ class FabricCluster:
         """Replicate a host buffer onto every device; the N copies contend
         on the shared host channel."""
         hbuf = self.host.buffers[name]
-        done = self.time
         with self._mark("broadcast", name):
+            legs, moves = [], []
             for i in range(self.n):
                 buf = self._dev_alloc(i, name, hbuf.array.shape,
                                       hbuf.array.dtype)
                 eng = f"h->d{i}"
-                done = max(done,
-                           self._submit(self.host_link, eng, "read",
-                                        hbuf.addr, hbuf.nbytes, name),
-                           self._submit(self.ports[i], eng, "write",
-                                        buf.addr, buf.nbytes, name))
+                legs.append(self._leg(self.host_link, eng, "read",
+                                      hbuf.addr, hbuf.nbytes, name))
+                legs.append(self._leg(self.ports[i], eng, "write",
+                                      buf.addr, buf.nbytes, name))
+                moves.append(buf)
+            done = self._issue_legs(legs)
+            for buf in moves:
                 np.copyto(buf.array, hbuf.array)
             self.time = max(self.time, done)
         self._cover("broadcast")
@@ -291,18 +314,18 @@ class FabricCluster:
                 f"gather({name!r}, axis={axis}): shards assemble to "
                 f"{out.shape}, host buffer is {hbuf.array.shape}")
         bounds = self._shard_bounds(out.shape[axis])
-        done = self.time
         with self._mark("gather", name):
+            legs = []
             for i, (b, (lo, hi)) in enumerate(zip(shards, bounds)):
                 eng = f"d{i}->h"
                 runs = [(hbuf.addr + off, nb) for off, nb in
                         shard_runs(out.shape, hbuf.array.itemsize, axis,
                                    lo, hi)]
-                done = max(done,
-                           self._submit(self.ports[i], eng, "read", b.addr,
-                                        b.nbytes, name),
-                           self._submit(self.host_link, eng, "write", 0, 0,
-                                        name, runs=runs))
+                legs.append(self._leg(self.ports[i], eng, "read", b.addr,
+                                      b.nbytes, name))
+                legs.append(self._leg(self.host_link, eng, "write", 0, 0,
+                                      name, runs=runs))
+            done = self._issue_legs(legs)
             self.time = max(self.time, done)
         np.copyto(hbuf.array, out)
         self._cover("gather")
@@ -339,8 +362,7 @@ class FabricCluster:
         combine = (lambda a, b: a + b) if op == "sum" else np.maximum
 
         def step(chunk_of: Callable[[int], int], reduce_leg: bool) -> None:
-            sends = []
-            done = self.time
+            sends, legs = [], []
             for i in range(self.n):
                 j = (i + 1) % self.n
                 lo, hi = bounds[chunk_of(i)]
@@ -348,15 +370,14 @@ class FabricCluster:
                     continue        # elements): nothing moves, no burst
                 nbytes = (hi - lo) * itemsize
                 eng = f"d{i}->d{j}"
-                done = max(done,
-                           self._submit(self.ports[i], eng, "read",
-                                        bufs[i].addr + lo * itemsize,
-                                        nbytes, name),
-                           self._submit(self.ports[j], eng, "write",
-                                        bufs[j].addr + lo * itemsize,
-                                        nbytes, name))
+                legs.append(self._leg(self.ports[i], eng, "read",
+                                      bufs[i].addr + lo * itemsize,
+                                      nbytes, name))
+                legs.append(self._leg(self.ports[j], eng, "write",
+                                      bufs[j].addr + lo * itemsize,
+                                      nbytes, name))
                 sends.append((j, lo, hi, flat[i][lo:hi].copy()))
-            self.time = max(self.time, done)
+            self.time = max(self.time, self._issue_legs(legs))
             for j, lo, hi, data in sends:
                 if reduce_leg:
                     flat[j][lo:hi] = combine(flat[j][lo:hi], data)
@@ -382,12 +403,12 @@ class FabricCluster:
             self.host.alloc(name, buf.array.shape, buf.array.dtype)
         eng = f"d{src_dev}->h"
         with self._mark("collect_replicated", name):
-            done = max(
-                self._submit(self.ports[src_dev], eng, "read", buf.addr,
-                             buf.nbytes, name),
-                self._submit(self.host_link, eng, "write",
-                             self.host.buffers[name].addr, buf.nbytes,
-                             name))
+            done = self._issue_legs([
+                self._leg(self.ports[src_dev], eng, "read", buf.addr,
+                          buf.nbytes, name),
+                self._leg(self.host_link, eng, "write",
+                          self.host.buffers[name].addr, buf.nbytes,
+                          name)])
             self.time = max(self.time, done)
         np.copyto(self.host.buffers[name].array, buf.array)
         return done

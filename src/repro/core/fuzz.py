@@ -41,7 +41,7 @@ from repro.core.congestion import CongestionConfig
 from repro.core.coverage import CoverageModel
 from repro.core.equivalence import compare_outputs
 from repro.core.registers import RO, W1C, RegisterFile
-from repro.core.transactions import Transaction, TransactionLog
+from repro.core.transactions import BurstBatch, Transaction, TransactionLog
 
 # P(inject) per opportunity, by fault kind (bridge layer).
 DEFAULT_RATES: Dict[str, float] = {
@@ -170,6 +170,39 @@ class FaultPlan:
             self._inject("bridge", "dma_delay",
                          f"{tag}: +{delay:.0f} cycles min-issue", log)
         return out
+
+    def perturb_batch(self, batch: "BurstBatch",
+                      log: Optional[TransactionLog]) -> "BurstBatch":
+        """``perturb_bursts`` over a ``BurstBatch`` — the batched hot
+        path's injection hook.  Draw-for-draw identical RNG consumption
+        and byte-identical audit strings, so a batch-built stream
+        reproduces the scalar fault trace exactly (the faulty_fuzz golden
+        trace and tests/test_simspeed.py are the witnesses)."""
+        n = len(batch)
+        if not n:
+            return batch
+        r = self.rng
+        tag = batch.tag[0] or batch.engine[0]
+        if n > 1 and r.random() < self.rates["dma_reorder"]:
+            batch.permute(r.permutation(n))
+            self._inject("bridge", "dma_reorder",
+                         f"{tag}: permuted {n} bursts", log)
+        if r.random() < self.rates["dma_split"]:
+            i = int(r.integers(len(batch)))
+            nb = int(batch.rec["nbytes"][i])
+            if nb > 1:
+                half = nb // 2
+                addr = int(batch.rec["addr"][i])
+                batch.split_row(i)
+                self._inject("bridge", "dma_split",
+                             f"{tag}: burst @{addr:#x} {nb}B -> "
+                             f"{half}+{nb - half}", log)
+        if r.random() < self.rates["dma_delay"]:
+            delay = float(r.integers(1, 400))
+            batch.delay(delay)
+            self._inject("bridge", "dma_delay",
+                         f"{tag}: +{delay:.0f} cycles min-issue", log)
+        return batch
 
     def flip_read(self, data: np.ndarray, tag: str,
                   log: Optional[TransactionLog]) -> bool:

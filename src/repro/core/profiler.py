@@ -217,7 +217,10 @@ def _profile_link(name: str, link: LinkModel) -> ChannelProfile:
     engines: Dict[str, EngineStats] = defaultdict(EngineStats)
     xfer_sum = 0.0
     prev_free = 0.0
-    for tx in link.timeline:
+    # one property read: materializes any lazy batch segments exactly once
+    # (per-tx dos/fault_delay attribution columns survive vectorization)
+    timeline = link.timeline
+    for tx in timeline:
         xfer = cfg.base_latency + tx.nbytes / cfg.link_bytes_per_cycle
         start = tx.complete - tx.dos - xfer
         wait = tx.stall - tx.dos
@@ -253,7 +256,7 @@ def _profile_link(name: str, link: LinkModel) -> ChannelProfile:
                                           contention=contended))
     residual = abs(bd.cycles["transfer"] + contended - xfer_sum)
     return ChannelProfile(name, "link", total, bd, dict(engines),
-                          list(link.timeline), cfg, residual)
+                          list(timeline), cfg, residual)
 
 
 def _profile_clock(name: str, mem: MemoryBridge,

@@ -466,7 +466,7 @@ class Recorder:
         # construction-time lines (e.g. congestion_perturb at bridge init)
         for log in self.logs:
             rec.preamble.extend(log.lines_since((0, 0, 0)))
-        rec.tx_marks = [[len(log.txs)] for log in self.logs]
+        rec.tx_marks = [[log.n_txs] for log in self.logs]
         self.checkpoint()
 
     def do(self, kind: str, *args: Any) -> Any:
@@ -477,7 +477,7 @@ class Recorder:
         for li, log in enumerate(self.logs):
             self.rec.lines.extend(log.lines_since(self._cursors[li]))
             self._cursors[li] = log.cursor()
-            self.rec.tx_marks[li].append(len(log.txs))
+            self.rec.tx_marks[li].append(log.n_txs)
         self.rec.line_marks.append(len(self.rec.lines))
         n = self.rec.n_ops
         if self.session.interval and n % self.session.interval == 0:

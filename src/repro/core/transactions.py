@@ -4,6 +4,14 @@ A Transaction is one logical memory burst: a DMA tile fetch (kernel
 BlockSpec-derived), a register access, or a host<->device transfer.  The
 TransactionLog renders bandwidth-utilization timelines and address/time
 heatmaps — the TPU-side analogue of FireBridge's AXI monitors.
+
+The modeled-time hot path is batched (docs/performance.md): burst
+splitting, fault perturbation, and link arbitration operate on
+``BurstBatch`` column arrays, and the log holds arbitrated batches as
+lazy segments — ``Transaction`` objects materialize only when something
+actually reads ``txs``, and canonical lines / digests render straight
+from the columns.  Everything stays bit-identical to the per-object
+path; the differential tier (tests/test_simspeed.py) is the witness.
 """
 from __future__ import annotations
 
@@ -11,7 +19,7 @@ import contextlib
 import dataclasses
 import hashlib
 from collections import defaultdict
-from typing import Callable, Dict, Iterable, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -32,6 +40,157 @@ class Transaction:
     # Never rendered into canonical lines — golden traces are unaffected.
     dos: float = 0.0
     fault_delay: float = 0.0
+
+
+# Column layout of one burst batch: every numeric Transaction field,
+# including the profiling-attribution columns, so per-tx attribution
+# survives vectorization unchanged.
+BURST_DTYPE = np.dtype([
+    ("time", np.float64), ("addr", np.int64), ("nbytes", np.int64),
+    ("stall", np.float64), ("complete", np.float64),
+    ("dos", np.float64), ("fault_delay", np.float64),
+])
+
+
+class BurstBatch:
+    """One batch of link-level bursts as a structured array + string
+    columns — the unit the vectorized hot path moves around instead of
+    ``List[Transaction]``.
+
+    ``rec`` is a structured numpy array (``BURST_DTYPE``); ``engine``,
+    ``kind`` and ``tag`` are parallel Python lists (string columns in
+    structured arrays cost more than they save at these batch sizes).
+
+    Lifecycle contract: build (split) -> perturb (fault plan) ->
+    arbitrate (stall/complete/dos filled in grant order) -> logged.
+    Once logged a batch is immutable — the same invariant a logged
+    ``Transaction`` already has — so ``materialize()`` may cache, and
+    the log and the link timeline sharing one segment alias the same
+    Transaction objects, exactly like per-object submission.
+    """
+
+    __slots__ = ("rec", "engine", "kind", "tag", "_txs")
+
+    def __init__(self, rec: np.ndarray, engine: List[str], kind: List[str],
+                 tag: List[str]) -> None:
+        self.rec = rec
+        self.engine = engine
+        self.kind = kind
+        self.tag = tag
+        self._txs: Optional[List[Transaction]] = None
+
+    def __len__(self) -> int:
+        return len(self.engine)
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def from_transfer(cls, time: float, engine: str, kind: str, addr: int,
+                      nbytes: int, tag: str, step: int) -> "BurstBatch":
+        """``split_bursts`` over columns: one transfer -> its burst batch
+        (at most ``step`` bytes per burst; 0 = never split)."""
+        return cls.from_runs(time, engine, kind, [(addr, nbytes)], tag, step)
+
+    @classmethod
+    def from_runs(cls, time: float, engine: str, kind: str,
+                  runs: Sequence[Tuple[int, int]], tag: str,
+                  step: int) -> "BurstBatch":
+        """One transfer leg over byte ``runs`` (strided inner-axis shards),
+        each run burst-split like ``split_bursts``."""
+        addrs: List[np.ndarray] = []
+        lens: List[np.ndarray] = []
+        for a, nb in runs:
+            if step <= 0 or nb <= step:
+                addrs.append(np.array([a], dtype=np.int64))
+                lens.append(np.array([nb], dtype=np.int64))
+            else:
+                off = np.arange(0, nb, step, dtype=np.int64)
+                addrs.append(a + off)
+                lens.append(np.minimum(step, nb - off))
+        a_col = addrs[0] if len(addrs) == 1 else np.concatenate(addrs)
+        n_col = lens[0] if len(lens) == 1 else np.concatenate(lens)
+        n = len(a_col)
+        rec = np.zeros(n, dtype=BURST_DTYPE)
+        rec["time"] = time
+        rec["addr"] = a_col
+        rec["nbytes"] = n_col
+        return cls(rec, [engine] * n, [kind] * n, [tag] * n)
+
+    @classmethod
+    def from_tuples(cls, time: float,
+                    txs: Sequence[Tuple[str, str, int, int]]) -> "BurstBatch":
+        """A kernel's static burst list — (engine, kind, addr, nbytes)
+        tuples sharing one min-issue time (bridge.log_burst_list)."""
+        n = len(txs)
+        rec = np.zeros(n, dtype=BURST_DTYPE)
+        rec["time"] = time
+        if n:
+            rec["addr"] = [t[2] for t in txs]
+            rec["nbytes"] = [t[3] for t in txs]
+        return cls(rec, [t[0] for t in txs], [t[1] for t in txs], [""] * n)
+
+    # ------------------------------------------- fault-plan mutation hooks
+    def permute(self, perm: np.ndarray) -> None:
+        """Reorder the batch (dma_reorder fault) — pre-arbitration only."""
+        self.rec = self.rec[perm]
+        ol = perm.tolist()
+        self.engine = [self.engine[i] for i in ol]
+        self.kind = [self.kind[i] for i in ol]
+        self.tag = [self.tag[i] for i in ol]
+
+    def split_row(self, i: int) -> None:
+        """Split burst ``i`` into two half-bursts (dma_split fault).
+        The halves are fresh rows (zero stall/complete/dos/fault_delay),
+        matching the scalar path's freshly constructed Transactions."""
+        r = self.rec
+        nb = int(r["nbytes"][i])
+        half = nb // 2
+        rows = np.zeros(2, dtype=BURST_DTYPE)
+        rows["time"] = r["time"][i]
+        rows["addr"] = (int(r["addr"][i]), int(r["addr"][i]) + half)
+        rows["nbytes"] = (half, nb - half)
+        self.rec = np.concatenate([r[:i], rows, r[i + 1:]])
+        self.engine[i:i + 1] = [self.engine[i]] * 2
+        self.kind[i:i + 1] = [self.kind[i]] * 2
+        self.tag[i:i + 1] = [self.tag[i]] * 2
+
+    def delay(self, delay: float) -> None:
+        """Bump every burst's min-issue time (dma_delay fault), keeping
+        the stall-attribution bookkeeping column in sync."""
+        self.rec["time"] += delay
+        self.rec["fault_delay"] += delay
+
+    # ------------------------------------------------------ materialization
+    def materialize(self) -> List[Transaction]:
+        """Transaction objects for this batch — built once, cached, so
+        every reader (log, link timeline, profiler) aliases the same
+        objects, exactly as per-object submission would."""
+        if self._txs is None:
+            r = self.rec
+            self._txs = [
+                Transaction(t, e, k, a, nb, tag, st, c, d, fd)
+                for t, a, nb, st, c, d, fd, e, k, tag in zip(
+                    r["time"].tolist(), r["addr"].tolist(),
+                    r["nbytes"].tolist(), r["stall"].tolist(),
+                    r["complete"].tolist(), r["dos"].tolist(),
+                    r["fault_delay"].tolist(), self.engine, self.kind,
+                    self.tag)]
+        return self._txs
+
+    def canonical_lines(self) -> List[str]:
+        """Canonical renderings straight from the columns — a digest of a
+        batch-built log never has to materialize Transaction objects."""
+        r = self.rec
+        out = []
+        for t, a, nb, st, c, e, k, tag in zip(
+                r["time"].tolist(), r["addr"].tolist(),
+                r["nbytes"].tolist(), r["stall"].tolist(),
+                r["complete"].tolist(), self.engine, self.kind, self.tag):
+            line = (f"{t:.6f} {e} {k} {a:#x} {nb} stall={st:.6f} "
+                    f"complete={c:.6f}")
+            if tag:
+                line += f" tag={tag}"
+            out.append(line)
+        return out
 
 
 @dataclasses.dataclass
@@ -58,21 +217,22 @@ def record_mark(marks: List[OpMark], log: "TransactionLog",
     """THE op-mark recorder: capture the clock + log cursor around a
     block and append one ``OpMark``.  Shared by the bridge's ``mark`` and
     the fabric's ``_mark`` so the two cannot drift; callers gate on their
-    own ``profile`` flag (a disabled profiler never reaches here)."""
-    t0, lo = now(), len(log.txs)
+    own ``profile`` flag (a disabled profiler never reaches here).  Uses
+    ``n_txs`` (a count, not the materialized list) so marking never
+    flushes lazy batch segments."""
+    t0, lo = now(), log.n_txs
     try:
         yield
     finally:
-        marks.append(OpMark(op, engine, t0, now(), lo, len(log.txs), meta))
+        marks.append(OpMark(op, engine, t0, now(), lo, log.n_txs, meta))
 
 
 def split_bursts(time: float, engine: str, kind: str, addr: int,
                  nbytes: int, tag: str, step: int) -> List[Transaction]:
     """Split one transfer into link-level bursts of at most ``step`` bytes
-    (0 = never split).  The ONE splitter shared by device-local DDR
-    accesses (bridge.py), the fabric links (fabric.py), and the
-    cluster-serving host channel (serving/cluster.py), so burst semantics
-    cannot drift between the traces they produce."""
+    (0 = never split).  Object-path twin of ``BurstBatch.from_transfer``
+    — the batched splitter the bridge/fabric/serving hot paths now use —
+    kept as the reference the differential tier compares against."""
     if step <= 0 or nbytes <= step:
         return [Transaction(time, engine, kind, addr, nbytes, tag=tag)]
     return [Transaction(time, engine, kind, addr + off,
@@ -90,18 +250,66 @@ class TransactionLog:
     congestion perturbation.  Keeping the channels separate lets the fuzz
     harness assert that every injected fault was audited without the
     injection itself failing a sweep's ``passed`` check.
+
+    The transaction stream is lazy: arbitrated ``BurstBatch`` segments
+    are appended by ``log_batch`` and only materialized into Transaction
+    objects when ``txs`` is actually read.  Canonicalization is lazy too
+    — rendered lines and the running sha256 are cached append-only and
+    invalidated on ``set_state`` (the one mutation that isn't an append),
+    so repeated ``digest()`` calls cost only the new suffix.
     """
 
     def __init__(self) -> None:
-        self.txs: List[Transaction] = []
+        self._txs: List[Transaction] = []
+        self._pending: List[BurstBatch] = []
+        self._n_pending = 0
         self.violations: List[str] = []
         self.faults: List[str] = []
+        # lazy canonicalization caches: rendered tx lines for a logical
+        # prefix of the stream, the sha256 over exactly those lines, and
+        # a keyed memo of the last full digest.  ``_epoch`` bumps on
+        # set_state so a restored stream can never alias a stale key.
+        self._lines: List[str] = []
+        self._tx_hash = hashlib.sha256()
+        self._digest_memo: Optional[Tuple[Tuple, str]] = None
+        self._epoch = 0
+
+    # ------------------------------------------------------- lazy segments
+    @property
+    def txs(self) -> List[Transaction]:
+        """The materialized transaction stream.  Reading this flushes any
+        pending batch segments into Transaction objects; hot paths that
+        only need counts/lines use ``n_txs``/``lines_since`` instead."""
+        if self._pending:
+            self._flush()
+        return self._txs
+
+    @property
+    def n_txs(self) -> int:
+        """Logical transaction count — flush-free (cursor/marks hot path)."""
+        return len(self._txs) + self._n_pending
+
+    def _flush(self) -> None:
+        for b in self._pending:
+            self._txs.extend(b.materialize())
+        self._pending.clear()
+        self._n_pending = 0
 
     def log(self, tx: Transaction) -> None:
-        self.txs.append(tx)
+        if self._pending:
+            self._flush()
+        self._txs.append(tx)
 
     def extend(self, txs: Iterable[Transaction]) -> None:
-        self.txs.extend(txs)
+        if self._pending:
+            self._flush()
+        self._txs.extend(txs)
+
+    def log_batch(self, batch: BurstBatch) -> None:
+        """Append one arbitrated burst batch as a lazy segment (the
+        batched hot path's ``log``)."""
+        self._pending.append(batch)
+        self._n_pending += len(batch)
 
     def violation(self, msg: str) -> None:
         self.violations.append(msg)
@@ -130,22 +338,31 @@ class TransactionLog:
         so a bridge + register file sharing one log stay wired after a
         checkpoint restore.  Entries are aliased under the same
         immutable-once-logged invariant as ``get_state`` — the restore
-        path is the replay hot loop (bench_replay.py economics)."""
-        self.txs[:] = state["txs"]
+        path is the replay hot loop (bench_replay.py economics).  The
+        restored stream may share no prefix with the cached rendering, so
+        every canonicalization cache is invalidated here."""
+        self._pending.clear()
+        self._n_pending = 0
+        self._txs[:] = state["txs"]
         self.violations[:] = state["violations"]
         self.faults[:] = state["faults"]
+        self._lines = []
+        self._tx_hash = hashlib.sha256()
+        self._digest_memo = None
+        self._epoch += 1
 
     def cursor(self) -> Tuple[int, int, int]:
         """(txs, violations, faults) lengths — a position in the stream,
         used by replay windows to attribute new entries to one timeline
-        op."""
-        return (len(self.txs), len(self.violations), len(self.faults))
+        op.  Flush-free."""
+        return (self.n_txs, len(self.violations), len(self.faults))
 
     def lines_since(self, cur: Tuple[int, int, int]) -> List[str]:
         """Canonical lines appended after ``cursor()`` returned ``cur``,
         in op-emission order (txs, then violations, then faults)."""
         nt, nv, nf = cur
-        lines = [self.canonical_line(t) for t in self.txs[nt:]]
+        self._render()
+        lines = list(self._lines[nt:])
         lines += [f"violation: {v}" for v in self.violations[nv:]]
         lines += [f"fault: {f}" for f in self.faults[nf:]]
         return lines
@@ -167,10 +384,33 @@ class TransactionLog:
             line += f" tag={t.tag}"
         return line
 
+    def _render(self) -> None:
+        """Extend the append-only line cache (and its running sha256) to
+        cover the whole logical stream — pending segments render straight
+        from their columns, so this never materializes Transactions."""
+        done = len(self._lines)
+        new: List[str] = []
+        if done < len(self._txs):
+            new += [self.canonical_line(t) for t in self._txs[done:]]
+            done = len(self._txs)
+        pos = len(self._txs)
+        for b in self._pending:
+            end = pos + len(b)
+            if done < end:
+                lines = b.canonical_lines()
+                new += lines[done - pos:] if done > pos else lines
+                done = end
+            pos = end
+        for line in new:
+            self._tx_hash.update(line.encode())
+            self._tx_hash.update(b"\n")
+        self._lines += new
+
     def canonical(self) -> List[str]:
         """Stable one-line-per-transaction rendering of the stream plus the
         audit channels — the golden-trace format (tests/golden/*.trace)."""
-        lines = [self.canonical_line(t) for t in self.txs]
+        self._render()
+        lines = list(self._lines)
         lines += [f"violation: {v}" for v in self.violations]
         lines += [f"fault: {f}" for f in self.faults]
         return lines
@@ -178,12 +418,25 @@ class TransactionLog:
     def digest(self) -> str:
         """sha256 over the canonical trace — the seeded-reproducibility
         witness used by the golden-trace regression tests and the fabric
-        same-seed checks."""
-        h = hashlib.sha256()
-        for line in self.canonical():
-            h.update(line.encode())
+        same-seed checks.  Digest-on-demand: the tx-line prefix hash is
+        cached append-only, so a repeat digest costs only the lines added
+        since the last one (tests/test_simspeed.py pins invalidation
+        across log/extend/violation/fault/set_state)."""
+        key = (self._epoch, self.n_txs, len(self.violations),
+               len(self.faults))
+        if self._digest_memo is not None and self._digest_memo[0] == key:
+            return self._digest_memo[1]
+        self._render()
+        h = self._tx_hash.copy()
+        for v in self.violations:
+            h.update(f"violation: {v}".encode())
             h.update(b"\n")
-        return h.hexdigest()
+        for f in self.faults:
+            h.update(f"fault: {f}".encode())
+            h.update(b"\n")
+        out = h.hexdigest()
+        self._digest_memo = (key, out)
+        return out
 
     # ------------------------------------------------------------ queries
     def total_bytes(self, engine: Optional[str] = None) -> int:

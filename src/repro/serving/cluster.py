@@ -27,7 +27,7 @@ from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
 from repro.core.fabric import FABRIC_LINK
 from repro.core.registers import RO, RegisterFile
-from repro.core.transactions import TransactionLog, split_bursts
+from repro.core.transactions import BurstBatch, TransactionLog
 # the front-end mirrors the single engine's CSR map exactly (firmware
 # drives either interchangeably); only NDEV is cluster-specific
 from repro.serving.engine import (ACTIVE, COMPLETED, CTRL, DOORBELL, STATUS,
@@ -121,18 +121,18 @@ class ClusterServingEngine:
     def _dma(self, engine: str, kind: str, addr: int, nbytes: int,
              tag: str, at: Optional[float] = None) -> float:
         """One transfer over the shared host↔fabric channel, burst-split
-        (core/fabric.split_bursts — same splitter as the fabric links),
+        (BurstBatch.from_transfer — same splitter as the fabric links),
         fault-perturbed, and congestion-arbitrated (this is where cluster
         prompt uploads and token writebacks contend).  ``at`` sets the
         min-issue time — transfers sharing one scheduler tick issue
         together and therefore contend, instead of serializing in program
         order."""
         t = self.time if at is None else at
-        bursts = split_bursts(t, engine, kind, addr, nbytes, tag,
-                              self.link_config.max_burst_bytes)
+        batch = BurstBatch.from_transfer(t, engine, kind, addr, nbytes, tag,
+                                         self.link_config.max_burst_bytes)
         if self.link_plan is not None:
-            bursts = self.link_plan.perturb_bursts(bursts, self.log)
-        done = self.host_link.submit(bursts, self.log)
+            batch = self.link_plan.perturb_batch(batch, self.log)
+        done = self.host_link.submit_batch(batch, self.log)
         self.time = max(self.time, done)
         return done
 

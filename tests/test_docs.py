@@ -50,6 +50,22 @@ def test_profiling_docs_transcript(tmp_path):
     assert (tmp_path / "profile_cnn.trace.json").exists()
 
 
+def test_performance_docs_transcript():
+    """The simspeed selftest transcript in docs/performance.md is the
+    verbatim output of benchmarks/bench_simspeed.py --selftest."""
+    expected = _fenced_transcript(
+        DOCS / "performance.md",
+        "prints (deterministic — modeled cycles only, no wall time):")
+    spec = importlib.util.spec_from_file_location(
+        "bench_simspeed", ROOT / "benchmarks" / "bench_simspeed.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        mod.selftest()
+    assert buf.getvalue().splitlines() == expected
+
+
 def test_index_links_every_page():
     index = (DOCS / "index.md").read_text()
     pages = sorted(p.name for p in DOCS.glob("*.md") if p.name != "index.md")

@@ -1,7 +1,8 @@
 """Golden-trace regression tests: canonical TransactionLog renderings for
-four fixed-seed runs — a single-device launch, a 4-device fabric
-all_reduce, a fault-plan-active fuzz scenario, and a cluster-serving
-storm — diffed line-by-line against committed traces (tests/golden/).
+five fixed-seed runs — a single-device launch, a 4-device fabric
+all_reduce, a 3-device batched-leg fabric launch, a fault-plan-active
+fuzz scenario, and a cluster-serving storm — diffed line-by-line against
+committed traces (tests/golden/).
 
 Every golden run is built through a ``DebugSession`` recording
 (core/replay.py), so a mismatch is explained with TIME TRAVEL instead of
@@ -140,6 +141,50 @@ def faulty_fuzz_run() -> GoldenRun:
     return GoldenRun.render(sess, rec, [None])
 
 
+def fabric_batched_launch_run() -> GoldenRun:
+    """Fixed-seed 3-device program pinning the batched same-launch
+    fabric-leg path: every transfer's legs are built as per-link burst
+    batches and issued per launch (core/fabric.py ``_issue_legs``), with
+    DoS on the links and an active fault plan perturbing the batches.
+    Covers contiguous (axis-0) and strided-run (axis-1) scatters, a
+    broadcast, per-device launches under device-local congestion, a
+    gather, a cross-device copy, and a replicated collect."""
+    from repro.core.fuzz import FaultPlan
+
+    def factory():
+        fab = FabricCluster(3, congestion=SINGLE_CONG,
+                            link_config=FABRIC_LINK,
+                            fault_plan=FaultPlan(seed=13))
+        fab.register_op("mm", **matmul_backends(tile=16, jit=False))
+        return fab
+
+    sess = rp.DebugSession(factory, checkpoint_interval=3,
+                           label="fabric_batched_launch")
+
+    def program(rec):
+        rng = np.random.default_rng(21)
+        act = rng.normal(size=(48, 48)).astype(np.float32)
+        wts = rng.normal(size=(48, 48)).astype(np.float32)
+        for name, arr in (("act", act), ("act2", act), ("wts", wts)):
+            rec.do("host_alloc", name, arr.shape, np.float32)
+            rec.do("host_write", name, arr)
+        rec.do("scatter", "act", 0)       # contiguous per-shard runs
+        rec.do("scatter", "act2", 1)      # strided inner-axis runs
+        rec.do("broadcast", "wts")
+        for i in range(3):
+            rec.do("dev_alloc", i, "out", (16, 48), np.float32)
+            rec.do("launch", i, "mm", "oracle", ("act", "wts"), ("out",),
+                   {})
+        rec.do("gather", "out", 0)
+        rec.do("dev_copy", 0, 2, "act", "act_copy")
+        rec.do("collect_replicated", "wts")
+
+    rec = sess.record(program)
+    return GoldenRun.render(
+        sess, rec, ["# fabric interconnect log"] +
+        [f"# device {i} log" for i in range(3)])
+
+
 def _storm_requests():
     rng = np.random.default_rng(STORM_SEED)
     return [(rid, [int(t) for t in rng.integers(0, 100, 6 + rid % 5)],
@@ -184,6 +229,7 @@ def cluster_serving_storm_run() -> GoldenRun:
 TRACES = {
     "single_device_launch": single_device_run,
     "fabric_all_reduce": fabric_all_reduce_run,
+    "fabric_batched_launch": fabric_batched_launch_run,
     "faulty_fuzz": faulty_fuzz_run,
     "cluster_serving_storm": cluster_serving_storm_run,
 }

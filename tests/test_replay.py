@@ -89,6 +89,30 @@ def test_checkpoint_restore_roundtrip_matches_uninterrupted_run():
             f"checkpoint @{ck.op_index} diverged on restore"
 
 
+def test_checkpoint_restore_keeps_lazy_digest_identity():
+    """set_state rebuilds the lazy digest caches: a restored checkpoint's
+    log digests equal a replayed prefix's (the incremental hash and memo
+    are reset, not stale), and resuming from any checkpoint reaches the
+    recorded final digest."""
+    import hashlib
+
+    def combined(target):
+        h = hashlib.sha256()
+        for log in rp.target_logs(target):
+            h.update(log.digest().encode())
+        return h.hexdigest()
+
+    sess = _bridge_session(fault_seed=7, interval=2)
+    rec = sess.record(_launch_program([32, 48, 64, 32]))
+    for ck in rec.checkpoints[1:]:
+        prefix = sess.replay(rec, 0, ck.op_index)
+        restored = sess.replay(rec, ck.op_index, ck.op_index)
+        assert combined(prefix.target) == combined(restored.target), \
+            f"digest diverged after restore @{ck.op_index}"
+        resumed = sess.replay(rec, ck.op_index, rec.n_ops)
+        assert combined(resumed.target) == rec.log_digest
+
+
 def test_recording_bridge_proxy_records_opaque_firmware():
     """An unmodified firmware callable run behind RecordingBridge yields
     the same trace as running it on the raw bridge."""
