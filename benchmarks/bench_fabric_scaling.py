@@ -1,17 +1,27 @@
-"""Fabric scaling: the multi-device co-verification sweep at 1/2/4
-devices (core/fabric.py; the FireSim-style scale-out lane).
+"""Fabric scaling: the multi-device co-verification sweep across device
+counts AND interconnect topologies (core/fabric.py + core/topology.py;
+the FireSim-style scale-out lane).
 
-For each device count the same systolic-matmul cell runs sharded across a
-FabricCluster through the CoVerifySession ``devices=`` axis, reporting
+For each (device count, topology) point the same systolic-matmul cell
+runs sharded across a FabricCluster through the CoVerifySession
+``devices=``/``topologies=`` axes, reporting
 
 * modeled fabric cycles (scatter/broadcast/launch/gather through the
   per-port links + shared host channel, congestion-arbitrated),
-* modeled link stall cycles (the Fig. 8 series, now inter-device), and
+* modeled link stall cycles (the Fig. 8 series, now inter-device),
+* routed runs' switch-hop stalls: total flit-arbitration stall summed
+  over switch ports plus the single hottest port, and
 * wall-clock seconds per cell,
 
-with the gathered result equivalence-checked against the single-device
-run (bit-identical by construction — reduction axes are never split).
-Full mode adds the head-sharded flash-attention op.
+with every gathered result equivalence-checked against the 1-device
+crossbar oracle (bit-identical by construction — reduction axes are
+never split, and routing reshapes timing, never data).  After the main
+table a ``hop`` section breaks the routed cells down per switch port —
+the per-hop stall columns that expose WHERE a topology congests.
+
+Quick mode (benchmarks/run.py) keeps the 1/2/4-device crossbar sweep
+plus one routed 4-device torus; full mode sweeps ring / 2D-torus /
+fat-tree at 4/8/16 devices and adds the head-sharded flash-attention op.
 
     PYTHONPATH=src:. python benchmarks/bench_fabric_scaling.py [--full]
 """
@@ -24,26 +34,43 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core import FABRIC_LINK, CoVerifySession
 
-DEVICES = (1, 2, 4)
 LINK = FABRIC_LINK
 MM_SIZE = 128
 FA_CFG = {"batch": 1, "heads": 8, "seq": 64, "dim": 16}
+TOPOLOGIES = (None, "ring", "torus2d", "fat_tree")
 
 
-def _sweep(op, firmware, fabric_firmware, backends, table, config):
+def _sweep(op, firmware, fabric_firmware, backends, table, config,
+           devices, topologies):
     sess = CoVerifySession(firmware, fabric_firmware=fabric_firmware,
                            link_config=LINK)
     sess.register_op(op, **table)
-    sess.add_sweep(op, backends, [config], devices=DEVICES)
+    sess.add_sweep(op, backends, [config], devices=devices,
+                   topologies=topologies)
     return sess.run(max_workers=4)
+
+
+def _hop_stalls(result):
+    """(total, hottest) switch-port flit-arbitration stall of one routed
+    cell, from the ``sw:*`` entries of its link_stats."""
+    per_port = {name: sum(r.per_engine_stall.values())
+                for name, r in (result.links or {}).items()
+                if name.startswith("sw:")}
+    return per_port, sum(per_port.values()), max(per_port.values(),
+                                                 default=0.0)
 
 
 def run(quick: bool = True) -> list[str]:
     from repro.kernels.flash_attention import sweep as fa_sweep
     from repro.kernels.systolic_matmul import sweep as mm_sweep
 
-    rows = ["case,op,backend,devices,bridge_cycles,link_stall_cycles,"
-            "wall_s,equivalent"]
+    devices = (1, 2, 4) if quick else (1, 4, 8, 16)
+    topologies = (None, "torus2d") if quick else TOPOLOGIES
+    rows = ["case,op,backend,devices,topology,bridge_cycles,"
+            "link_stall_cycles,hop_stall_cycles,max_hop_stall,wall_s,"
+            "equivalent"]
+    hop_rows = ["hop,op,backend,devices,topology,port,stall_cycles,"
+                "busy_cycles"]
     jobs = [("mm", mm_sweep.matmul_firmware,
              mm_sweep.matmul_fabric_firmware,
              ("oracle", "compiled") if quick else ("oracle", "interpret",
@@ -55,17 +82,29 @@ def run(quick: bool = True) -> list[str]:
                      ("oracle", "interpret"),
                      fa_sweep.flash_backends(), FA_CFG))
     for op, fw, ffw, backends, table, config in jobs:
-        report = _sweep(op, fw, ffw, backends, table, config)
+        report = _sweep(op, fw, ffw, backends, table, config, devices,
+                        topologies)
         assert report.passed, report.summary()
-        for r in sorted(report.cells, key=lambda r: (r.cell.backend,
-                                                     r.cell.devices)):
+        for r in sorted(report.cells,
+                        key=lambda r: (r.cell.backend, r.cell.devices,
+                                       r.cell._topo_kind or "")):
+            topo = r.cell._topo_kind or "crossbar"
+            per_port, hop_total, hop_max = _hop_stalls(r)
             if r.cell.devices > 1:
                 assert r.link_stall > 0, \
                     f"no modeled link stalls at {r.cell.label}"
+            if r.cell.topology is not None:
+                assert per_port, f"no switch ports at {r.cell.label}"
             rows.append(f"fabric,{op},{r.cell.backend},{r.cell.devices},"
-                        f"{r.bridge_time:.0f},{r.link_stall:.0f},"
-                        f"{r.seconds:.3f},{report.passed}")
-    return rows
+                        f"{topo},{r.bridge_time:.0f},{r.link_stall:.0f},"
+                        f"{hop_total:.0f},{hop_max:.0f},{r.seconds:.3f},"
+                        f"{report.passed}")
+            for port, stall in sorted(per_port.items()):
+                busy = sum(r.links[port].per_engine_busy.values())
+                hop_rows.append(
+                    f"hop,{op},{r.cell.backend},{r.cell.devices},{topo},"
+                    f"{port[3:]},{stall:.0f},{busy:.0f}")
+    return rows + hop_rows
 
 
 def run_full() -> list[str]:

@@ -11,6 +11,10 @@
   fabric        — multi-device cluster with modeled interconnect: per-port
                   links + shared host channel, sharded launches, ring
                   all_reduce (FireSim-style scale-out)
+  topology      — switched-interconnect shapes (ring / 2D-torus / fat
+                  tree) with static routing tables
+  switch        — modeled flit switch layer: per-port arbitration +
+                  credit-based flow control over the topology graph
   coverage      — functional-coverage bins over protocol/burst/congestion/
                   fault/fabric stimulus, fed by fuzz + fabric
   fuzz          — seeded fault injection + randomized protocol stimulus
@@ -44,6 +48,9 @@ from repro.core.replay import (DebugSession, DivergenceReport, Recording,
                                bisect_divergence, record_serving_storm)
 from repro.core.scheduler import (CellResult, CoVerifySession, SweepCell,
                                   SweepReport, run_sequential)
+from repro.core.switch import SwitchFabric, SwitchPort
+from repro.core.topology import (TOPOLOGY_KINDS, Topology, build_topology,
+                                 fat_tree, ring, torus2d)
 from repro.core.transactions import Transaction, TransactionLog
 
 __all__ = [
@@ -58,5 +65,7 @@ __all__ = [
     "Recording", "RecordingBridge", "ReplayWindow", "bisect_divergence",
     "record_serving_storm", "CATEGORIES", "DataMovementProfiler",
     "RooflinePlacement", "StallBreakdown", "profile_recording",
-    "profile_window", "validate_trace",
+    "profile_window", "validate_trace", "Topology", "build_topology",
+    "ring", "torus2d", "fat_tree", "TOPOLOGY_KINDS", "SwitchFabric",
+    "SwitchPort",
 ]

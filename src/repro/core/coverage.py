@@ -15,6 +15,12 @@ so the bin set cannot silently drift from the stimulus generators:
                 sets together)
   fabric      — multi-device interconnect operations (core/fabric.py)
   serving     — serving-submit protocol outcomes (fuzz serving layer)
+  topology    — interconnect shape a fabric run routed through
+                (crossbar default or a core/topology.py builder)
+  hops        — switch-hop count per routed journey (h0 = endpoints on
+                one switch, h3plus = deep routes)
+  credit_stall— credit-based flow control outcomes at switch ports
+                (granted immediately vs. waited for a credit)
 
 ``ProtocolFuzzer`` feeds it while scenarios run and ``FabricCluster``
 feeds it from fabric transfers; the fuzz acceptance run must reach 100%
@@ -35,6 +41,10 @@ FAULT_BINS = ("dma_delay", "dma_reorder", "dma_split", "bitflip_read",
 FABRIC_BINS = ("dev_copy", "scatter", "broadcast", "gather", "all_reduce")
 SERVING_BINS = ("ok", "bad_len", "zero_maxnew", "dup_rid", "over_budget",
                 "max_maxnew", "pad_straddle")
+# crossbar plus core/topology.py's TOPOLOGY_KINDS (tests pin the two sets)
+TOPOLOGY_BINS = ("crossbar", "ring", "torus2d", "fat_tree")
+HOP_BINS = ("h0", "h1", "h2", "h3plus")
+CREDIT_BINS = ("granted", "waited")
 
 GROUPS: Dict[str, Tuple[str, ...]] = {
     "protocol": PROTOCOL_BINS,
@@ -43,6 +53,9 @@ GROUPS: Dict[str, Tuple[str, ...]] = {
     "fault_kind": FAULT_BINS,
     "fabric": FABRIC_BINS,
     "serving": SERVING_BINS,
+    "topology": TOPOLOGY_BINS,
+    "hops": HOP_BINS,
+    "credit_stall": CREDIT_BINS,
 }
 
 
@@ -75,6 +88,10 @@ class CoverageModel:
     def hit_congestion(self, stall: float) -> None:
         """Bucket one arbitrated transaction by its congestion outcome."""
         self.hit("congestion", "stalled" if stall > 0 else "free")
+
+    def hit_hops(self, n_hops: int) -> None:
+        """Bucket one routed journey by its switch-hop count."""
+        self.hit("hops", f"h{n_hops}" if n_hops < 3 else "h3plus")
 
     def merge(self, other: "CoverageModel") -> "CoverageModel":
         for g, bins in other.counts.items():

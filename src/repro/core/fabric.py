@@ -15,8 +15,22 @@ pieces:
 * one shared **host↔fabric DMA channel** that every scatter/gather and
   cluster-serving token writeback must cross.
 
+With ``topology=None`` (the default) the ports hang off one implicit
+zero-hop crossbar: a transfer is a read leg on the source attachment and
+a write leg on the destination attachment, both issued at the fabric
+clock.  With a ``Topology`` (core/topology.py — ring / 2D-torus /
+fat-tree) installed, every transfer instead travels a **multi-hop
+journey** through the modeled switch graph (core/switch.py): the source
+leg, then one flit-framed, credit-flow-controlled switch hop per link on
+the static route (store-and-forward — each hop issues at the previous
+hop's completion), then the destination leg.  Inter-device stalls become
+placement-dependent, the profiler attributes contention per hop, and
+``all_reduce`` switches to a hierarchical tree that exploits switch
+locality.  The crossbar path is byte-for-byte unchanged — the five
+pre-topology golden traces pin it.
+
 Every fabric transfer — ``dev_copy``, ``scatter``/``broadcast``/
-``gather`` of sharded buffers, and the ring ``all_reduce`` collective —
+``gather`` of sharded buffers, and the ``all_reduce`` collective —
 is split into link-level bursts, arbitrated through the port models
 (advancing the fabric clock and accumulating per-link stall statistics),
 logged in the fabric ``TransactionLog``, and routed through a forked
@@ -41,6 +55,8 @@ import numpy as np
 from repro.core.bridge import FireBridge, MemoryBridge
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
+from repro.core.switch import SwitchFabric
+from repro.core.topology import Topology, build_topology
 from repro.core.transactions import (BurstBatch, OpMark, Transaction,
                                      TransactionLog, record_mark)
 
@@ -80,13 +96,19 @@ class FabricCluster:
     cluster reproduces from one seed regardless of device count.
     ``coverage`` (core/coverage.py) observes fabric operations, burst
     sizes, and link congestion states when provided.
+
+    ``topology`` routes inter-device and host traffic through a modeled
+    switch graph instead of the implicit crossbar: a ``Topology``
+    instance (core/topology.py), or a builder name (``"ring"``,
+    ``"torus2d"``, ``"fat_tree"``) applied to ``n_devices``.  ``None``
+    keeps crossbar timing bit-exactly (golden traces).
     """
 
     def __init__(self, n_devices: int, *, name: str = "fab",
                  congestion: Optional[CongestionConfig] = None,
                  link_config: Optional[CongestionConfig] = None,
                  fault_plan=None, coverage=None,
-                 profile: bool = False) -> None:
+                 profile: bool = False, topology=None) -> None:
         if n_devices < 1:
             raise ValueError(f"need at least one device, got {n_devices}")
         self.n = n_devices
@@ -120,6 +142,20 @@ class FabricCluster:
         self.host_link = LinkModel(lc)
         self.ports = [LinkModel(dataclasses.replace(lc, seed=lc.seed + 1 + i))
                       for i in range(n_devices)]
+        # routed interconnect (core/switch.py): None = implicit crossbar
+        if isinstance(topology, str):
+            topology = build_topology(topology, n_devices)
+        if topology is not None and topology.n_devices != n_devices:
+            raise ValueError(
+                f"topology {topology.kind!r} describes "
+                f"{topology.n_devices} devices, cluster has {n_devices}")
+        self.topology: Optional[Topology] = topology
+        self.switch = (SwitchFabric(topology, lc)
+                       if topology is not None else None)
+        if coverage is not None:
+            coverage.hit("topology",
+                         topology.kind if topology is not None
+                         else "crossbar")
         # host-side staging DDR (firmware-visible; host accesses are free,
         # crossing the fabric is not)
         self.host = MemoryBridge(self.log)
@@ -206,6 +242,76 @@ class FabricCluster:
                     self.coverage.hit_congestion(st)
         return done
 
+    # ------------------------------------------------------ routed journeys
+    def _journey(self, src, dst, engine: str, src_runs, dst_runs,
+                 src_tag: str, dst_tag: str):
+        """Hop list for one routed transfer unit between endpoints (device
+        index or ``'h'`` for the host staging DDR): the source-attachment
+        read leg, one flit-framed switch hop per link on the static route
+        (carrying the destination byte runs), and the destination-
+        attachment write leg.  Hop = (link, engine, kind, runs, tag,
+        burst step, SwitchPort-or-None).  Returns None when nothing moves
+        (mirrors ``_leg``'s empty-leg skip)."""
+        src_runs = [(a, nb) for a, nb in src_runs if nb > 0]
+        dst_runs = [(a, nb) for a, nb in dst_runs if nb > 0]
+        if not src_runs or not dst_runs:
+            return None
+        mb = self.link_config.max_burst_bytes
+        src_link = self.host_link if src == "h" else self.ports[src]
+        dst_link = self.host_link if dst == "h" else self.ports[dst]
+        hops = [(src_link, engine, "read", src_runs, src_tag, mb, None)]
+        for p in self.switch.route_ports(src, dst):
+            hops.append((p.link, engine, "flit", dst_runs, dst_tag,
+                         self.topology.flit_bytes, p))
+        hops.append((dst_link, engine, "write", dst_runs, dst_tag, mb,
+                     None))
+        return hops
+
+    def _issue_journeys(self, journeys) -> float:
+        """Issue routed journeys wave by wave: wave k carries every
+        journey's k-th hop, each hop's batch issuing at that journey's
+        previous-hop completion (store-and-forward).  Journeys therefore
+        pipeline — journey B's source leg contends with journey A's
+        source leg, not with A's deepest hop — and shared switch ports
+        arbitrate the flit trains of every journey crossing them.  Switch
+        hops additionally pay credit-based flow control before entering
+        the port (core/switch.py)."""
+        cov = self.coverage
+        js = [j for j in journeys if j is not None]
+        if cov is not None:
+            for j in js:
+                cov.hit_hops(len(j) - 2)
+        done = self.time
+        ready = [self.time] * len(js)
+        for k in range(max((len(j) for j in js), default=0)):
+            for ji, j in enumerate(js):
+                if k >= len(j):
+                    continue
+                link, engine, kind, runs, tag, step, port = j[k]
+                t = ready[ji]
+                if port is not None:
+                    t_in = port.acquire(t)
+                    if cov is not None:
+                        cov.hit("credit_stall",
+                                "waited" if t_in > t else "granted")
+                    t = t_in
+                batch = BurstBatch.from_runs(t, engine, kind, runs, tag,
+                                             step)
+                if self.fault_plan is not None:
+                    batch = self.fault_plan.perturb_batch(batch, self.log)
+                d = link.submit_batch(batch, self.log)
+                if port is not None:
+                    port.release(batch.rec["complete"].tolist())
+                ready[ji] = d
+                if d > done:
+                    done = d
+                if cov is not None:
+                    for nb, st in zip(batch.rec["nbytes"].tolist(),
+                                      batch.rec["stall"].tolist()):
+                        cov.hit_burst(nb)
+                        cov.hit_congestion(st)
+        return done
+
     def _cover(self, op: str) -> None:
         if self.coverage is not None:
             self.coverage.hit("fabric", op)
@@ -230,11 +336,16 @@ class FabricCluster:
                                sbuf.array.dtype)
         eng = f"d{src_dev}->d{dst_dev}"
         with self._mark("dev_copy", name):
-            done = self._issue_legs([
-                self._leg(self.ports[src_dev], eng, "read", sbuf.addr,
-                          sbuf.nbytes, name),
-                self._leg(self.ports[dst_dev], eng, "write", dbuf.addr,
-                          dbuf.nbytes, dst_name)])
+            if self.switch is None:
+                done = self._issue_legs([
+                    self._leg(self.ports[src_dev], eng, "read", sbuf.addr,
+                              sbuf.nbytes, name),
+                    self._leg(self.ports[dst_dev], eng, "write", dbuf.addr,
+                              dbuf.nbytes, dst_name)])
+            else:
+                done = self._issue_journeys([self._journey(
+                    src_dev, dst_dev, eng, [(sbuf.addr, sbuf.nbytes)],
+                    [(dbuf.addr, dbuf.nbytes)], name, dst_name)])
             self.time = max(self.time, done)
         np.copyto(dbuf.array, sbuf.array)
         self._cover("dev_copy")
@@ -259,19 +370,25 @@ class FabricCluster:
         shards = np.array_split(hbuf.array, self.n, axis=axis)
         bounds = self._shard_bounds(hbuf.array.shape[axis])
         with self._mark("scatter", name):
-            legs, moves = [], []
+            legs, journeys, moves = [], [], []
             for i, (sh, (lo, hi)) in enumerate(zip(shards, bounds)):
                 buf = self._dev_alloc(i, name, sh.shape, hbuf.array.dtype)
                 eng = f"h->d{i}"
                 runs = [(hbuf.addr + off, nb) for off, nb in
                         shard_runs(hbuf.array.shape, hbuf.array.itemsize,
                                    axis, lo, hi)]
-                legs.append(self._leg(self.host_link, eng, "read", 0, 0,
-                                      name, runs=runs))
-                legs.append(self._leg(self.ports[i], eng, "write",
-                                      buf.addr, sh.nbytes, name))
+                if self.switch is None:
+                    legs.append(self._leg(self.host_link, eng, "read", 0,
+                                          0, name, runs=runs))
+                    legs.append(self._leg(self.ports[i], eng, "write",
+                                          buf.addr, sh.nbytes, name))
+                else:
+                    journeys.append(self._journey(
+                        "h", i, eng, runs, [(buf.addr, sh.nbytes)],
+                        name, name))
                 moves.append((buf, sh))
-            done = self._issue_legs(legs)
+            done = (self._issue_legs(legs) if self.switch is None
+                    else self._issue_journeys(journeys))
             for buf, sh in moves:
                 np.copyto(buf.array, sh)
             self.time = max(self.time, done)
@@ -283,17 +400,23 @@ class FabricCluster:
         on the shared host channel."""
         hbuf = self.host.buffers[name]
         with self._mark("broadcast", name):
-            legs, moves = [], []
+            legs, journeys, moves = [], [], []
             for i in range(self.n):
                 buf = self._dev_alloc(i, name, hbuf.array.shape,
                                       hbuf.array.dtype)
                 eng = f"h->d{i}"
-                legs.append(self._leg(self.host_link, eng, "read",
-                                      hbuf.addr, hbuf.nbytes, name))
-                legs.append(self._leg(self.ports[i], eng, "write",
-                                      buf.addr, buf.nbytes, name))
+                if self.switch is None:
+                    legs.append(self._leg(self.host_link, eng, "read",
+                                          hbuf.addr, hbuf.nbytes, name))
+                    legs.append(self._leg(self.ports[i], eng, "write",
+                                          buf.addr, buf.nbytes, name))
+                else:
+                    journeys.append(self._journey(
+                        "h", i, eng, [(hbuf.addr, hbuf.nbytes)],
+                        [(buf.addr, buf.nbytes)], name, name))
                 moves.append(buf)
-            done = self._issue_legs(legs)
+            done = (self._issue_legs(legs) if self.switch is None
+                    else self._issue_journeys(journeys))
             for buf in moves:
                 np.copyto(buf.array, hbuf.array)
             self.time = max(self.time, done)
@@ -315,17 +438,23 @@ class FabricCluster:
                 f"{out.shape}, host buffer is {hbuf.array.shape}")
         bounds = self._shard_bounds(out.shape[axis])
         with self._mark("gather", name):
-            legs = []
+            legs, journeys = [], []
             for i, (b, (lo, hi)) in enumerate(zip(shards, bounds)):
                 eng = f"d{i}->h"
                 runs = [(hbuf.addr + off, nb) for off, nb in
                         shard_runs(out.shape, hbuf.array.itemsize, axis,
                                    lo, hi)]
-                legs.append(self._leg(self.ports[i], eng, "read", b.addr,
-                                      b.nbytes, name))
-                legs.append(self._leg(self.host_link, eng, "write", 0, 0,
-                                      name, runs=runs))
-            done = self._issue_legs(legs)
+                if self.switch is None:
+                    legs.append(self._leg(self.ports[i], eng, "read",
+                                          b.addr, b.nbytes, name))
+                    legs.append(self._leg(self.host_link, eng, "write", 0,
+                                          0, name, runs=runs))
+                else:
+                    journeys.append(self._journey(
+                        i, "h", eng, [(b.addr, b.nbytes)], runs,
+                        name, name))
+            done = (self._issue_legs(legs) if self.switch is None
+                    else self._issue_journeys(journeys))
             self.time = max(self.time, done)
         np.copyto(hbuf.array, out)
         self._cover("gather")
@@ -341,6 +470,12 @@ class FabricCluster:
 
         The accumulation order per chunk is fixed by the ring, so results
         (and the transaction-log digest) reproduce exactly run-to-run.
+
+        With a topology installed the collective instead runs
+        **hierarchically** (``_all_reduce_routed``): members reduce onto
+        their switch-local leader, leaders tree-reduce across the
+        network, then the result tree- and locally-broadcasts back —
+        the locality-exploiting shape the routed interconnect rewards.
         """
         if op not in ("sum", "max"):
             raise ValueError(f"unsupported all_reduce op {op!r}")
@@ -356,10 +491,12 @@ class FabricCluster:
             return self.time
         flat = [b.array.reshape(-1) for b in bufs]
         itemsize = bufs[0].array.itemsize
+        combine = (lambda a, b: a + b) if op == "sum" else np.maximum
+        if self.switch is not None:
+            return self._all_reduce_routed(name, bufs, flat, combine)
         splits = np.array_split(np.arange(flat[0].size), self.n)
         bounds = [(int(ix[0]), int(ix[-1]) + 1) if len(ix) else (0, 0)
                   for ix in splits]
-        combine = (lambda a, b: a + b) if op == "sum" else np.maximum
 
         def step(chunk_of: Callable[[int], int], reduce_leg: bool) -> None:
             sends, legs = [], []
@@ -394,6 +531,59 @@ class FabricCluster:
                 step(lambda i, s=s: (i + 1 - s) % self.n, False)
         return self.time
 
+    def _all_reduce_routed(self, name: str, bufs, flat,
+                           combine: Callable) -> float:
+        """Hierarchical all_reduce over the switch graph, four phases:
+        switch-local members reduce onto their group leader
+        (``local_reduce``), leaders tree-reduce across the network with
+        stride doubling (``tree_reduce``), the result walks back down the
+        tree (``tree_bcast``), and leaders rebroadcast locally
+        (``local_bcast``).  Every transfer is a full-buffer routed
+        journey; within a round no device is both sender and receiver,
+        and combines apply in pair-list order, so results and digests
+        reproduce exactly."""
+        groups = self.topology.groups()
+        leaders = [g[0] for g in groups]
+
+        def xfer(pairs: List[Tuple[int, int]], label: str,
+                 reduce_leg: bool) -> None:
+            if not pairs:
+                return
+            with self._mark("all_reduce", label):
+                journeys = [self._journey(
+                    s, d, f"d{s}->d{d}", [(bufs[s].addr, bufs[s].nbytes)],
+                    [(bufs[d].addr, bufs[d].nbytes)], name, name)
+                    for s, d in pairs]
+                self.time = max(self.time, self._issue_journeys(journeys))
+                for s, d in pairs:
+                    if reduce_leg:
+                        flat[d][:] = combine(flat[d], flat[s])
+                    else:
+                        flat[d][:] = flat[s]
+
+        max_members = max(len(g) for g in groups)
+        for r in range(1, max_members):         # members -> leaders
+            xfer([(g[r], g[0]) for g in groups if len(g) > r],
+                 f"local_reduce[{r - 1}]", True)
+        stride, rnd = 1, 0                      # leaders tree-reduce
+        while stride < len(leaders):
+            xfer([(leaders[i], leaders[i - stride])
+                  for i in range(stride, len(leaders), 2 * stride)],
+                 f"tree_reduce[{rnd}]", True)
+            stride *= 2
+            rnd += 1
+        rnd = 0                                 # tree broadcast back down
+        while stride > 1:
+            stride //= 2
+            xfer([(leaders[i - stride], leaders[i])
+                  for i in range(stride, len(leaders), 2 * stride)],
+                 f"tree_bcast[{rnd}]", False)
+            rnd += 1
+        for r in range(1, max_members):         # leaders -> members
+            xfer([(g[0], g[r]) for g in groups if len(g) > r],
+                 f"local_bcast[{r - 1}]", False)
+        return self.time
+
     def collect_replicated(self, name: str, src_dev: int = 0) -> float:
         """Pull one device's replica of ``name`` back to the host buffer
         (allocated on first collect) — the writeback leg for ops whose
@@ -403,12 +593,18 @@ class FabricCluster:
             self.host.alloc(name, buf.array.shape, buf.array.dtype)
         eng = f"d{src_dev}->h"
         with self._mark("collect_replicated", name):
-            done = self._issue_legs([
-                self._leg(self.ports[src_dev], eng, "read", buf.addr,
-                          buf.nbytes, name),
-                self._leg(self.host_link, eng, "write",
-                          self.host.buffers[name].addr, buf.nbytes,
-                          name)])
+            if self.switch is None:
+                done = self._issue_legs([
+                    self._leg(self.ports[src_dev], eng, "read", buf.addr,
+                              buf.nbytes, name),
+                    self._leg(self.host_link, eng, "write",
+                              self.host.buffers[name].addr, buf.nbytes,
+                              name)])
+            else:
+                done = self._issue_journeys([self._journey(
+                    src_dev, "h", eng, [(buf.addr, buf.nbytes)],
+                    [(self.host.buffers[name].addr, buf.nbytes)],
+                    name, name)])
             self.time = max(self.time, done)
         np.copyto(self.host.buffers[name].array, buf.array)
         return done
@@ -424,6 +620,8 @@ class FabricCluster:
             "host": self.host.get_state(),
             "host_link": self.host_link.get_state(),
             "ports": [p.get_state() for p in self.ports],
+            "switch": (self.switch.get_state()
+                       if self.switch is not None else None),
             "time": self.time,
             "fault_plan": (self.fault_plan.get_state()
                            if self.fault_plan is not None else None),
@@ -436,16 +634,22 @@ class FabricCluster:
         self.host_link.set_state(state["host_link"])
         for p, s in zip(self.ports, state["ports"]):
             p.set_state(s)
+        if self.switch is not None and state.get("switch") is not None:
+            self.switch.set_state(state["switch"])
         self.time = state["time"]
         if state["fault_plan"] is not None:
             self.fault_plan.set_state(state["fault_plan"])
 
     # --------------------------------------------------------- diagnostics
     def link_stats(self) -> Dict[str, CongestionResult]:
-        """Per-link Fig. 8 statistics: the host channel plus every port."""
+        """Per-link Fig. 8 statistics: the host channel, every device
+        port, and (routed fabrics) every switch port as ``sw:a->b``."""
         out = {"host": self.host_link.result()}
         for i, p in enumerate(self.ports):
             out[f"d{i}"] = p.result()
+        if self.switch is not None:
+            for label, link in self.switch.labeled_links():
+                out[f"sw:{label}"] = link.result()
         return out
 
     def total_link_stall(self) -> float:

@@ -360,6 +360,12 @@ class DataMovementProfiler:
                                                target.host_link))
             for i, p in enumerate(target.ports):
                 self.channels.append(_profile_link(f"fabric/port{i}", p))
+            if target.switch is not None:
+                # routed fabric: one channel (and Perfetto track) per
+                # switch port — per-hop contention attribution
+                for label, link in target.switch.labeled_links():
+                    self.channels.append(
+                        _profile_link(f"fabric/{label}", link))
             for i, d in enumerate(target.devices):
                 self.channels.extend(_bridge_channels(f"d{i}/", d))
                 self.marks.extend((d.log, m) for m in d.mem.marks)
@@ -383,6 +389,11 @@ class DataMovementProfiler:
         if _is_cluster_serving(target):
             self.channels.append(_profile_link("host", target.host_link))
             self.channels.append(_profile_csr("csr", target.csr))
+            sw = getattr(target, "switch", None)
+            if sw is not None:
+                for label, link in sw.labeled_links():
+                    self.channels.append(_profile_link(f"sw/{label}",
+                                                       link))
             for i, eng in enumerate(target.engines):
                 if eng.mem.link is not None:
                     self.channels.append(

@@ -275,8 +275,8 @@ _TRACE_KEYS = frozenset({"log", "timeline"})
 # (per-backend fault forks, perturbed congestion) only diverge
 # functionally when data actually differs
 _TIMING_KEYS = _TRACE_KEYS | frozenset({
-    "time", "link", "host_link", "ports", "rng", "fault_plan", "link_plan",
-    "next", "rr", "written"})
+    "time", "link", "host_link", "ports", "switch", "rng", "fault_plan",
+    "link_plan", "next", "rr", "written"})
 # keys whose subtrees hold USER data (buffer names, register addresses,
 # request ids) — exclusion must stop at their boundary, or a buffer that
 # happens to be named "time"/"link" would silently vanish from every

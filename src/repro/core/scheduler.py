@@ -95,6 +95,13 @@ class SweepCell:
     equivalence-checked against the single-device cells of the same
     ``(op, config)`` group — outputs must match across scales, while the
     modeled link statistics are reported per scale.
+
+    ``topology`` is the interconnect sweep axis riding on ``devices``: a
+    core/topology.py builder name (or Topology instance) routes the
+    fabric cell through a switched network instead of the crossbar.  It
+    stays out of the ``(op, config)`` group key — a 2D-torus 8-device
+    run diffs against the same 1-device oracle, because routing may
+    reshape *timing*, never gathered results.
     """
     op: str
     backend: str
@@ -102,18 +109,31 @@ class SweepCell:
     congestion: Optional[CongestionConfig] = None
     fault_plan: Optional[FaultPlan] = None
     devices: int = 1
+    topology: Optional[Any] = None
+
+    @property
+    def _topo_kind(self) -> Optional[str]:
+        if self.topology is None:
+            return None
+        return (self.topology if isinstance(self.topology, str)
+                else self.topology.kind)
 
     @property
     def label(self) -> str:
         cfg = ",".join(f"{k}={v}" for k, v in sorted(self.config.items()))
         dev = f"x{self.devices}dev" if self.devices > 1 else ""
-        return f"{self.op}[{cfg}]@{self.backend}{dev}"
+        topo = f"@{self._topo_kind}" if self.topology is not None else ""
+        return f"{self.op}[{cfg}]@{self.backend}{dev}{topo}"
 
     @property
     def group_member(self) -> str:
         """Key of this cell inside its (op, config) equivalence group."""
-        return (self.backend if self.devices == 1
-                else f"{self.backend}@{self.devices}dev")
+        if self.devices == 1 and self.topology is None:
+            return self.backend
+        member = f"{self.backend}@{self.devices}dev"
+        if self.topology is not None:
+            member += f"@{self._topo_kind}"
+        return member
 
 
 @dataclasses.dataclass
@@ -304,25 +324,31 @@ class CoVerifySession:
                  config: Optional[Dict[str, Any]] = None,
                  congestion: Optional[CongestionConfig] = None,
                  fault_plan: Optional[FaultPlan] = None,
-                 devices: int = 1) -> SweepCell:
+                 devices: int = 1, topology=None) -> SweepCell:
         """Append one ``(op, backend, config)`` cell to the sweep;
-        ``devices > 1`` runs it sharded on a FabricCluster."""
+        ``devices > 1`` runs it sharded on a FabricCluster, and
+        ``topology`` routes that cluster through a switched interconnect
+        (builder name or Topology instance, core/topology.py)."""
         if op not in self._ops:
             raise KeyError(f"op {op!r} not registered")
         cell = SweepCell(op, backend, dict(config or {}),
                          congestion or self.congestion,
                          fault_plan or self.fault_plan,
-                         devices=devices)
+                         devices=devices, topology=topology)
         self.cells.append(cell)
         return cell
 
     def add_sweep(self, op: str, backends: Tuple[str, ...],
                   configs: List[Dict[str, Any]],
-                  devices: Tuple[int, ...] = (1,)) -> List[SweepCell]:
-        """Cross-product convenience: one cell per
-        (backend, config, device count)."""
-        return [self.add_cell(op, be, cfg, devices=n)
-                for cfg in configs for be in backends for n in devices]
+                  devices: Tuple[int, ...] = (1,),
+                  topologies: Tuple[Optional[Any], ...] = (None,)
+                  ) -> List[SweepCell]:
+        """Cross-product convenience: one cell per (backend, config,
+        device count, topology).  Topologies only apply to multi-device
+        counts — the 1-device oracle always runs crossbar, once."""
+        return [self.add_cell(op, be, cfg, devices=n, topology=t)
+                for cfg in configs for be in backends for n in devices
+                for t in (topologies if n > 1 else (None,))]
 
     # ----------------------------------------------------------- execute
     def _run_cell(self, cell: SweepCell) -> CellResult:
@@ -361,7 +387,7 @@ class CoVerifySession:
         what enters the cross-scale equivalence group."""
         fab = FabricCluster(cell.devices, congestion=cell.congestion,
                             link_config=self.link_config, fault_plan=plan,
-                            profile=self.profile)
+                            profile=self.profile, topology=cell.topology)
         fab.register_op(cell.op, **self._ops[cell.op])
         fw = self.fabric_firmware or self.firmware
         t0 = time.perf_counter()

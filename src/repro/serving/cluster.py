@@ -27,6 +27,8 @@ from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
 from repro.core.fabric import FABRIC_LINK
 from repro.core.registers import RO, RegisterFile
+from repro.core.switch import SwitchFabric
+from repro.core.topology import build_topology
 from repro.core.transactions import BurstBatch, TransactionLog
 # the front-end mirrors the single engine's CSR map exactly (firmware
 # drives either interchangeably); only NDEV is cluster-specific
@@ -45,7 +47,7 @@ class ClusterServingEngine:
                  flags=None, prompt_pad: int = 16,
                  congestion: Optional[CongestionConfig] = None,
                  link_config: Optional[CongestionConfig] = None,
-                 fault_plan=None):
+                 fault_plan=None, topology=None):
         if n_devices < 1:
             raise ValueError(f"need at least one device, got {n_devices}")
         self.n = n_devices
@@ -54,6 +56,17 @@ class ClusterServingEngine:
         self.link_config = link_config if link_config is not None \
             else FABRIC_LINK
         self._fault_plan = fault_plan
+        # optional switched interconnect (core/topology.py): prompt
+        # uploads and token writebacks then additionally cross the switch
+        # hops between the host attachment and the engine's switch, so
+        # writeback contention becomes placement-dependent
+        if isinstance(topology, str):
+            topology = build_topology(topology, n_devices)
+        if topology is not None and topology.n_devices != n_devices:
+            raise ValueError(
+                f"topology {topology.kind!r} describes "
+                f"{topology.n_devices} devices, cluster has {n_devices}")
+        self._topology = topology
 
         def _child_plan(plan, i):
             return plan.fork(f"cluster/e{i}") if plan is not None else None
@@ -86,6 +99,10 @@ class ClusterServingEngine:
         # link (a forked child, so the cluster reproduces from one seed)
         self.link_plan = (fault_plan.fork("cluster/links")
                           if fault_plan is not None else None)
+        # fresh switch state per control-plane (re)init, so reset() also
+        # resets flit arbitration and credit windows
+        self.switch = (SwitchFabric(self._topology, self.link_config)
+                       if self._topology is not None else None)
         self.time = 0.0
         self.mem = MemoryBridge(self.log)       # host staging DDR
         self.mem.alloc("prompt_in", (self.max_len,), np.int32)
@@ -119,22 +136,42 @@ class ClusterServingEngine:
 
     # ----------------------------------------------------------- fabric DMA
     def _dma(self, engine: str, kind: str, addr: int, nbytes: int,
-             tag: str, at: Optional[float] = None) -> float:
+             tag: str, at: Optional[float] = None,
+             dev: Optional[int] = None) -> float:
         """One transfer over the shared host↔fabric channel, burst-split
         (BurstBatch.from_transfer — same splitter as the fabric links),
         fault-perturbed, and congestion-arbitrated (this is where cluster
         prompt uploads and token writebacks contend).  ``at`` sets the
         min-issue time — transfers sharing one scheduler tick issue
         together and therefore contend, instead of serializing in program
-        order."""
+        order.
+
+        With a topology installed and ``dev`` given, the transfer is a
+        store-and-forward journey: outbound (``h->e*``) crosses the host
+        channel then the flit-framed, credit-flow-controlled switch hops
+        toward the engine's switch; inbound (``e*->h``) crosses the
+        switch hops first.  ``dev=None`` (or no topology) keeps the
+        single-channel crossbar path bit-exactly."""
         t = self.time if at is None else at
-        batch = BurstBatch.from_transfer(t, engine, kind, addr, nbytes, tag,
-                                         self.link_config.max_burst_bytes)
-        if self.link_plan is not None:
-            batch = self.link_plan.perturb_batch(batch, self.log)
-        done = self.host_link.submit_batch(batch, self.log)
-        self.time = max(self.time, done)
-        return done
+        hops = [(self.host_link, self.link_config.max_burst_bytes, None)]
+        if self.switch is not None and dev is not None:
+            outbound = engine.startswith("h->")
+            ports = (self.switch.route_ports("h", dev) if outbound
+                     else self.switch.route_ports(dev, "h"))
+            sw = [(p.link, self._topology.flit_bytes, p) for p in ports]
+            hops = hops + sw if outbound else sw + hops
+        for link, step, port in hops:
+            if port is not None:
+                t = port.acquire(t)
+            batch = BurstBatch.from_transfer(t, engine, kind, addr,
+                                             nbytes, tag, step)
+            if self.link_plan is not None:
+                batch = self.link_plan.perturb_batch(batch, self.log)
+            t = link.submit_batch(batch, self.log)
+            if port is not None:
+                port.release(batch.rec["complete"].tolist())
+        self.time = max(self.time, t)
+        return t
 
     # ------------------------------------------------------ front protocol
     def _on_doorbell(self, _data: int) -> None:
@@ -155,7 +192,8 @@ class ClusterServingEngine:
         # prompt DMA: host staging buffer -> device-local prompt_in over
         # the shared channel (a bad request still paid for its upload)
         src = self.mem.buffers["prompt_in"]
-        self._dma(f"h->e{i}", "write", src.addr, src.nbytes, "prompt_in")
+        self._dma(f"h->e{i}", "write", src.addr, src.nbytes, "prompt_in",
+                  dev=i)
         np.copyto(eng.mem.buffers["prompt_in"].array, src.array)
         # forward the submission through the device-local CSR protocol;
         # remaining validation (bad length, KV budget) happens there and
@@ -209,7 +247,7 @@ class ClusterServingEngine:
             out.array[row, :] = 0
             out.array[row, :len(toks)] = toks
             self._dma(f"e{i}->h", "write", out.addr + row * row_bytes,
-                      row_bytes, f"tokens[{rid}]", at=tick)
+                      row_bytes, f"tokens[{rid}]", at=tick, dev=i)
             self.completed += 1
             self.csr.hw_set("COMPLETED", self.completed & 0xFFFFFFFF)
 
@@ -238,6 +276,8 @@ class ClusterServingEngine:
             "mem": self.mem.get_state(),    # front staging DDR + self.log
             "csr": self.csr.get_state(),
             "host_link": self.host_link.get_state(),
+            "switch": (self.switch.get_state()
+                       if self.switch is not None else None),
             "link_plan": (self.link_plan.get_state()
                           if self.link_plan is not None else None),
             "time": self.time,
@@ -253,6 +293,8 @@ class ClusterServingEngine:
         self.mem.set_state(state["mem"])
         self.csr.set_state(state["csr"])
         self.host_link.set_state(state["host_link"])
+        if self.switch is not None and state.get("switch") is not None:
+            self.switch.set_state(state["switch"])
         if state["link_plan"] is not None:
             self.link_plan.set_state(state["link_plan"])
         self.time = state["time"]

@@ -65,6 +65,41 @@ def test_report_names_every_hole():
     assert cov.percent("protocol") == 100.0
 
 
+def test_routed_fabric_closes_interconnect_coverage():
+    """Satellite gate: the topology / hops / credit_stall groups the
+    switch layer feeds all close under one short routed run per topology
+    kind (plus the crossbar default), and the bin set is pinned to
+    core/topology.py's builder registry."""
+    from repro.core.coverage import TOPOLOGY_BINS
+    from repro.core.fabric import FabricCluster
+    from repro.core.topology import TOPOLOGY_KINDS, fat_tree, ring, torus2d
+
+    assert set(TOPOLOGY_BINS) == {"crossbar"} | set(TOPOLOGY_KINDS)
+    cov = CoverageModel()
+    FabricCluster(1, coverage=cov)                # crossbar default
+
+    def run(topology, src, dst):
+        fab = FabricCluster(topology.n_devices, coverage=cov,
+                            topology=topology)
+        fab.alloc_sharded("x", (64,), np.float32, axis=None)
+        fab.dev_copy(src, dst, "x")
+
+    run(fat_tree(4, leaf_width=4), 0, 1)          # h0: same leaf switch
+    run(ring(4), 0, 1)                            # h1: ring neighbours
+    run(torus2d(8), 0, 5)                         # h2: one x + one y hop
+    run(ring(8), 0, 4)                            # h3plus: 4 hops around
+    assert cov.covered("topology"), cov.holes("topology")
+    assert cov.covered("hops"), cov.holes("hops")
+    # credit exhaustion: broadcasting through a credits=1 ring funnels
+    # two journeys over switch 0's clockwise egress port, so the second
+    # flit train must wait for the first to drain its single credit
+    fab = FabricCluster(4, coverage=cov, topology=ring(4, credits=1))
+    fab.host.alloc("b", (4096,), np.float32)
+    fab.broadcast("b")
+    assert cov.covered("credit_stall"), cov.holes("credit_stall")
+    assert cov.counts["credit_stall"]["waited"] > 0
+
+
 def test_merge_accumulates():
     a, b = CoverageModel(), CoverageModel()
     a.hit("protocol", "w1c_clear", 2)

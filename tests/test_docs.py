@@ -50,6 +50,22 @@ def test_profiling_docs_transcript(tmp_path):
     assert (tmp_path / "profile_cnn.trace.json").exists()
 
 
+def test_topology_docs_transcript():
+    """The routed-interconnect tour transcript in docs/topology.md is the
+    verbatim output of examples/topology_tour.py."""
+    expected = _fenced_transcript(
+        DOCS / "topology.md",
+        "prints (deterministic — modeled cycles only, no wall time):")
+    spec = importlib.util.spec_from_file_location(
+        "topology_tour", ROOT / "examples" / "topology_tour.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        assert mod.main([]) == 0
+    assert buf.getvalue().splitlines() == expected
+
+
 def test_performance_docs_transcript():
     """The simspeed selftest transcript in docs/performance.md is the
     verbatim output of benchmarks/bench_simspeed.py --selftest."""

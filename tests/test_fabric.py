@@ -315,20 +315,29 @@ def test_fabric_cell_error_does_not_kill_sweep():
 
 @pytest.mark.slow
 def test_bench_fabric_scaling_quick_mode():
-    """The scaling benchmark's quick mode reports 1/2/4-device rows with
-    modeled cycles and non-zero link stalls at every multi-device scale."""
+    """The scaling benchmark's quick mode reports 1/2/4-device crossbar
+    rows plus a routed 4-device torus with per-hop stall columns, modeled
+    cycles, and non-zero link stalls at every multi-device scale."""
     import sys
     from pathlib import Path
     sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
     from benchmarks.bench_fabric_scaling import run
     rows = run(quick=True)
-    assert rows[0].startswith("case,op,backend,devices")
-    body = [r.split(",") for r in rows[1:]]
+    assert rows[0].startswith("case,op,backend,devices,topology")
+    body = [r.split(",") for r in rows[1:] if r.startswith("fabric,")]
+    hops = [r.split(",") for r in rows[1:]
+            if r.startswith("hop,") and not r.startswith("hop,op,")]
     assert {int(r[3]) for r in body} == {1, 2, 4}
+    assert {r[4] for r in body} == {"crossbar", "torus2d"}
     for r in body:
         assert r[-1] == "True"
         if int(r[3]) > 1:
-            assert float(r[5]) > 0          # link stalls modeled
+            assert float(r[6]) > 0          # link stalls modeled
+        if r[4] != "crossbar":
+            assert float(r[7]) >= float(r[8]) >= 0   # hop columns close
+    # routed cells break down per switch port
+    assert hops and all(h[4] == "torus2d" for h in hops)
+    assert any(float(h[6]) > 0 for h in hops)
 
 
 # ------------------------------------------------------- cluster serving

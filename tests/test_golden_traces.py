@@ -1,8 +1,9 @@
 """Golden-trace regression tests: canonical TransactionLog renderings for
-five fixed-seed runs — a single-device launch, a 4-device fabric
-all_reduce, a 3-device batched-leg fabric launch, a fault-plan-active
-fuzz scenario, and a cluster-serving storm — diffed line-by-line against
-committed traces (tests/golden/).
+six fixed-seed runs — a single-device launch, a 4-device fabric
+all_reduce, a 3-device batched-leg fabric launch, an 8-device 2D-torus
+ROUTED run (multi-hop journeys + hierarchical all_reduce), a
+fault-plan-active fuzz scenario, and a cluster-serving storm — diffed
+line-by-line against committed traces (tests/golden/).
 
 Every golden run is built through a ``DebugSession`` recording
 (core/replay.py), so a mismatch is explained with TIME TRAVEL instead of
@@ -185,6 +186,50 @@ def fabric_batched_launch_run() -> GoldenRun:
         [f"# device {i} log" for i in range(3)])
 
 
+def fabric_torus_all_reduce_run() -> GoldenRun:
+    """Fixed-seed 8-device 2D-torus run pinning the ROUTED fabric path:
+    every transfer is a multi-hop journey (source leg, flit-framed
+    credit-flow-controlled switch hops, destination leg) and all_reduce
+    runs the hierarchical local/tree schedule, with DoS on every link
+    (switch ports included, decorrelated seeds) and an active fault plan
+    perturbing the hop batches.  Covers scatter/broadcast journeys from
+    the host attachment, a multi-hop dev_copy, the hierarchical
+    all_reduce, a gather, and a replicated collect."""
+    from repro.core.fuzz import FaultPlan
+
+    def factory():
+        return FabricCluster(8, link_config=FABRIC_LINK,
+                             fault_plan=FaultPlan(seed=13),
+                             topology="torus2d")
+
+    sess = rp.DebugSession(factory, checkpoint_interval=3,
+                           label="fabric_torus_all_reduce")
+
+    def program(rec):
+        rng = np.random.default_rng(29)
+        act = rng.normal(size=(32, 32)).astype(np.float32)
+        rec.do("host_alloc", "act", act.shape, np.float32)
+        rec.do("host_write", "act", act)
+        rec.do("scatter", "act", 0)
+        rec.do("host_alloc", "wts", (16, 16), np.float32)
+        rec.do("host_write", "wts",
+               rng.normal(size=(16, 16)).astype(np.float32))
+        rec.do("broadcast", "wts")
+        for i in range(8):
+            rec.do("dev_alloc", i, "grad", (16, 16), np.float32)
+            rec.do("dev_host_write", i, "grad",
+                   np.full((16, 16), float(i + 1), np.float32))
+        rec.do("all_reduce", "grad", "sum")
+        rec.do("dev_copy", 0, 5, "grad", "grad_copy")  # x + y hops
+        rec.do("gather", "act", 0)
+        rec.do("collect_replicated", "wts")
+
+    rec = sess.record(program)
+    return GoldenRun.render(
+        sess, rec, ["# fabric interconnect log"] +
+        [f"# device {i} log" for i in range(8)])
+
+
 def _storm_requests():
     rng = np.random.default_rng(STORM_SEED)
     return [(rid, [int(t) for t in rng.integers(0, 100, 6 + rid % 5)],
@@ -230,6 +275,7 @@ TRACES = {
     "single_device_launch": single_device_run,
     "fabric_all_reduce": fabric_all_reduce_run,
     "fabric_batched_launch": fabric_batched_launch_run,
+    "fabric_torus_all_reduce": fabric_torus_all_reduce_run,
     "faulty_fuzz": faulty_fuzz_run,
     "cluster_serving_storm": cluster_serving_storm_run,
 }

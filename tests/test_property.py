@@ -115,6 +115,75 @@ def test_fabric_timing_monotonicity(base, extra, n_dev):
     assert run(extra_first=True) >= run(extra_first=False)
 
 
+@st.composite
+def routed_cases(draw):
+    """Arbitrary (topology, shape, shard axis) routed-fabric cases over
+    every core/topology.py builder at assorted device counts."""
+    kind = draw(st.sampled_from(("ring", "torus2d", "fat_tree")))
+    n_dev = draw(st.integers(2, 9))
+    nd = draw(st.integers(1, 3))
+    shape = tuple(draw(st.integers(1, 10)) for _ in range(nd))
+    axis = draw(st.integers(0, nd - 1))
+    return kind, n_dev, shape, axis
+
+
+@given(routed_cases(), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_routed_scatter_gather_bit_identical_to_single_device(case, seed):
+    """Routing reshapes TIMING, never data: for any topology / device
+    count / shape / axis, scatter->gather through the switched fabric
+    (DoS on every link, switch ports included) round-trips the host
+    buffer bit-identically to the 1-device crossbar oracle."""
+    from repro.core.fabric import FabricCluster
+    kind, n_dev, shape, axis = case
+    data = np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+    def run(n, topology):
+        fab = FabricCluster(n, topology=topology,
+                            link_config=CongestionConfig(
+                                dos_prob=0.1, seed=seed,
+                                max_burst_bytes=64))
+        fab.host.alloc("x", shape, np.float32)
+        fab.host.host_write("x", data)
+        fab.scatter("x", axis=axis)
+        fab.host.buffers["x"].array[:] = 0
+        fab.gather("x", axis=axis)
+        return fab.host.host_read("x")
+
+    oracle = run(1, None)
+    routed = run(n_dev, kind)
+    assert np.array_equal(oracle, data)
+    assert np.array_equal(routed, oracle)
+
+
+@given(st.integers(4, 12), st.integers(1, 32),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_routed_time_monotone_in_hop_count(n_dev, rows, seed):
+    """At dos=0, a lone transfer's modeled completion is monotone in its
+    switch-hop count: store-and-forward means every extra hop adds at
+    least one flit's base latency, so a farther destination on the same
+    ring can never complete earlier than a nearer one."""
+    from repro.core.fabric import FabricCluster
+    from repro.core.topology import ring
+
+    topo = ring(n_dev)
+    cfg = CongestionConfig(dos_prob=0.0, max_burst_bytes=128)
+    prev = None
+    # ring hop count from device 0 grows with min(d, n-d); walk dst along
+    # increasing distance and require completion times to be sorted
+    dsts = sorted(range(1, n_dev), key=lambda d: min(d, n_dev - d))
+    for dst in dsts:
+        fab = FabricCluster(n_dev, topology=topo, link_config=cfg)
+        fab.alloc_sharded("x", (rows, 4), np.float32, axis=None)
+        done = fab.dev_copy(0, dst, "x")
+        hops = topo.n_hops(0, dst)
+        if prev is not None:
+            assert (hops, done) >= prev, \
+                f"dst {dst}: {hops} hops done at {done}, after {prev}"
+        prev = (hops, done)
+
+
 # -------------------------------------------------------------------- replay
 
 
