@@ -33,7 +33,8 @@ def main() -> None:
     from benchmarks import (bench_access_patterns, bench_bandwidth_profile,
                             bench_debug_iteration, bench_fabric_scaling,
                             bench_fuzz, bench_hls4ml_scaling,
-                            bench_profiler, bench_replay, bench_simspeed)
+                            bench_profiler, bench_replay, bench_runfarm,
+                            bench_simspeed)
     from benchmarks import roofline as roofline_mod
 
     print("name,us_per_call,derived")
@@ -47,6 +48,7 @@ def main() -> None:
     _run("replay_debug_iteration", bench_replay.run)  # quick mode
     _run("profiler_overhead", bench_profiler.run)   # quick mode
     _run("simspeed", bench_simspeed.run)            # quick mode
+    _run("runfarm_scaling", bench_runfarm.run)      # quick mode
 
     def _roofline():
         recs = roofline_mod.load("baseline")

@@ -35,12 +35,38 @@ def _flatten(tree: Any):
 
 
 class CheckpointManager:
+    """Use as a context manager (``with CheckpointManager(...) as mgr:``)
+    so the in-flight async write is always joined — and its error
+    surfaced — before the process moves on; a bare instance must call
+    ``wait()``/``close()`` itself.
+
+    Failure contract: a checkpoint either commits completely (the atomic
+    ``.tmp`` -> final rename) or leaves nothing visible — a write that
+    dies mid-``npz`` removes its ``.tmp`` staging directory, and the
+    exception is re-raised to the caller on the next ``save()``/``wait()``
+    instead of dying silently on the worker thread (pre-fix, a crashing
+    campaign could leave a truncated step directory and the training loop
+    kept checkpointing into the void)."""
+
     def __init__(self, directory, keep: int = 3, async_save: bool = True):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.async_save = async_save
         self._pending: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.wait()                 # flush + surface any write error
+        else:                           # already unwinding: join the
+            self._join()                # writer but don't mask the error
+
+    def close(self) -> None:
+        self.wait()
 
     # ------------------------------------------------------------- save
     def save(self, step: int, state: Any, extras: Optional[dict] = None):
@@ -51,35 +77,52 @@ class CheckpointManager:
         self.wait()
         if self.async_save:
             self._pending = threading.Thread(
-                target=self._write, args=(step, host, extras or {}))
+                target=self._write_guarded, args=(step, host, extras or {}))
             self._pending.start()
         else:
             self._write(step, host, extras or {})
+
+    def _write_guarded(self, step: int, host, extras: dict):
+        try:
+            self._write(step, host, extras)
+        except BaseException as e:      # surfaced on the next wait()/save()
+            self._error = e
 
     def _write(self, step: int, host, extras: dict):
         final = self.dir / f"step_{step:08d}"
         tmp = self.dir / f"step_{step:08d}.tmp"
         if tmp.exists():
             shutil.rmtree(tmp)
-        shard = tmp / "shard_00000"
-        shard.mkdir(parents=True)
-        np.savez(shard / "leaves.npz", **{p: v for p, v in host})
-        meta = {
-            "step": step,
-            "leaves": {p: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                       for p, v in host},
-            "extras": extras,
-        }
-        (tmp / "meta.json").write_text(json.dumps(meta))
+        try:
+            shard = tmp / "shard_00000"
+            shard.mkdir(parents=True)
+            np.savez(shard / "leaves.npz", **{p: v for p, v in host})
+            meta = {
+                "step": step,
+                "leaves": {p: {"shape": list(v.shape),
+                               "dtype": str(v.dtype)}
+                           for p, v in host},
+                "extras": extras,
+            }
+            (tmp / "meta.json").write_text(json.dumps(meta))
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)   # nothing partial
+            raise
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)                                   # atomic commit
         self._gc()
 
-    def wait(self):
+    def _join(self):
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+
+    def wait(self):
+        self._join()
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
         steps = sorted(self.list_steps())

@@ -28,6 +28,7 @@ of the protocol bins, and ``report()`` names any hole.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional, Tuple
 
 PROTOCOL_BINS = ("doorbell_ok", "doorbell_busy", "ro_write", "w1c_clear",
@@ -60,11 +61,31 @@ GROUPS: Dict[str, Tuple[str, ...]] = {
 
 
 class CoverageModel:
-    """Hit counters over the declared coverage groups."""
+    """Hit counters over the declared coverage groups.
+
+    ``hit()`` is thread-safe: one model may be shared as the sink of
+    concurrent sweep cells / fuzz scenarios on a thread pool
+    (``CoVerifySession.run``), where the unguarded ``counts[g][b] += n``
+    read-modify-write used to lose updates between the load and the
+    store.  The lock is intentionally per-model and held only for the
+    increment; cross-process campaigns (repro/runfarm) instead give every
+    worker a private model and ``merge()`` them deterministically."""
 
     def __init__(self) -> None:
         self.counts: Dict[str, Dict[str, int]] = {
             g: {b: 0 for b in bins} for g, bins in GROUPS.items()}
+        self._lock = threading.Lock()
+
+    # locks are not picklable; a model shipped across processes (runfarm
+    # result records) re-grows a fresh one on arrival
+    def __getstate__(self) -> dict:
+        state = dict(self.__dict__)
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------- feeding
     def hit(self, group: str, bin_name: str, n: int = 1) -> None:
@@ -76,7 +97,8 @@ class CoverageModel:
             raise KeyError(
                 f"unknown bin {bin_name!r} in group {group!r} "
                 f"(declared: {sorted(bins)})")
-        bins[bin_name] += n
+        with self._lock:
+            bins[bin_name] += n
 
     def hit_burst(self, nbytes: int) -> None:
         """Bucket one transaction by burst size."""
@@ -99,6 +121,38 @@ class CoverageModel:
                 if n:
                     self.hit(g, b, n)
         return self
+
+    # --------------------------------------------------- (de)serialization
+    def to_counts(self) -> Dict[str, Dict[str, int]]:
+        """Sparse JSON-friendly snapshot: only nonzero bins, for the
+        runfarm's per-unit result records (one line of JSON per unit)."""
+        with self._lock:
+            return {g: {b: n for b, n in bins.items() if n}
+                    for g, bins in self.counts.items()
+                    if any(bins.values())}
+
+    @classmethod
+    def from_counts(cls, counts: Dict[str, Dict[str, int]]
+                    ) -> "CoverageModel":
+        model = cls()
+        for g, bins in counts.items():
+            for b, n in bins.items():
+                model.hit(g, b, int(n))
+        return model
+
+    def merge_counts(self, counts: Dict[str, Dict[str, int]]) -> List[str]:
+        """Merge a sparse snapshot; returns the ``group.bin`` names this
+        merge newly covered (count 0 -> >0) — the signal the runfarm's
+        coverage-guided scheduler prioritizes seeds by."""
+        new: List[str] = []
+        for g in sorted(counts):
+            for b in sorted(counts[g]):
+                n = int(counts[g][b])
+                if n:
+                    if self.counts[g][b] == 0:
+                        new.append(f"{g}.{b}")
+                    self.hit(g, b, n)
+        return new
 
     # ------------------------------------------------------------- queries
     def percent(self, group: str) -> float:

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.bridge import FireBridge
 from repro.core.congestion import CongestionConfig, CongestionResult
+from repro.core.coverage import CoverageModel
 from repro.core.equivalence import EquivalenceReport, compare_outputs
 from repro.core.fabric import FabricCluster
 from repro.core.fuzz import FaultEvent, FaultPlan
@@ -153,6 +154,11 @@ class CellResult:
     # profile=True: per-channel stall attribution closing to bridge_time,
     # exportable to Perfetto via SweepReport.save_traces
     profile: Optional[Any] = None
+    # the cell's PRIVATE functional-coverage model when the session has a
+    # coverage sink: each cell feeds its own model so concurrent cells
+    # cannot interleave, and run() merges them in cell order at join —
+    # the merged result is identical at any max_workers
+    coverage: Optional[CoverageModel] = None
 
     @property
     def link_stall(self) -> float:
@@ -193,6 +199,9 @@ class SweepReport:
     equivalence: Dict[str, EquivalenceReport]
     wall_seconds: float
     divergences: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # merged functional coverage across all cells (deterministic cell-order
+    # merge of the per-cell private models) when the session has a sink
+    coverage: Optional[CoverageModel] = None
 
     @property
     def passed(self) -> bool:
@@ -215,10 +224,16 @@ class SweepReport:
                             for g, d in self.divergences.items()},
         }
 
-    def to_rows(self) -> List[str]:
+    def to_rows(self, wall: bool = True) -> List[str]:
         """CSV-ish rows for benchmark output.  The utilization and
         per-category stall-attribution columns are filled when the session
-        ran with ``profile=True`` (core/profiler.py), "-" otherwise."""
+        ran with ``profile=True`` (core/profiler.py), "-" otherwise.
+
+        ``wall=False`` renders the wall-clock ``seconds`` column as "-",
+        leaving only modeled/deterministic quantities — rows are then
+        byte-identical at any ``max_workers`` (and across runs), which is
+        what the run-farm digests and the ordering-determinism regression
+        test compare."""
         from repro.core.profiler import CATEGORIES
         rows = ["cell,backend,devices,seconds,bridge_cycles,stall_cycles,"
                 "link_stall_cycles,utilization,"
@@ -234,8 +249,9 @@ class SweepReport:
                                         for c in CATEGORIES))
             else:
                 prof_cols = "-," + ",".join("-" for _ in CATEGORIES)
+            secs = f"{r.seconds:.3f}" if wall else "-"
             rows.append(f"{r.cell.op},{r.cell.backend},{r.cell.devices},"
-                        f"{r.seconds:.3f},{r.bridge_time:.0f},{stall:.0f},"
+                        f"{secs},{r.bridge_time:.0f},{stall:.0f},"
                         f"{r.link_stall:.0f},{prof_cols},{status}")
         return rows
 
@@ -290,10 +306,18 @@ class CoVerifySession:
                  fault_plan: Optional[FaultPlan] = None,
                  fabric_firmware: Optional[Callable[..., None]] = None,
                  link_config: Optional[CongestionConfig] = None,
-                 profile: bool = False) -> None:
+                 profile: bool = False,
+                 coverage: Optional[CoverageModel] = None) -> None:
         self.firmware = firmware
         self.congestion = congestion
         self.fault_plan = fault_plan
+        # functional-coverage sink (core/coverage.py).  Cells never write
+        # to it concurrently: each cell feeds a PRIVATE model and run()
+        # merges them into this sink in cell order after the pool joins,
+        # so the merged counts are exact and identical at any max_workers
+        # (the thread-pool lost-update fix rode along as a lock inside
+        # CoverageModel.hit for externally shared sinks).
+        self.coverage = coverage
         # with ``profile`` every cell's bridge/cluster records op marks and
         # CellResult.profile carries the data-movement profile
         # (core/profiler.py): utilization + stall-attribution columns in
@@ -358,6 +382,7 @@ class CoVerifySession:
                 if cell.fault_plan is not None else None)
         if cell.devices > 1 or self.fabric_firmware is not None:
             return self._run_fabric_cell(cell, plan)
+        cov = CoverageModel() if self.coverage is not None else None
         fb = FireBridge(congestion=cell.congestion, fault_plan=plan,
                         profile=self.profile)
         fb.register_op(cell.op, **self._ops[cell.op])
@@ -368,6 +393,8 @@ class CoVerifySession:
         except Exception as e:            # cell failure must not kill sweep
             err = f"{type(e).__name__}: {e}"
         dt = time.perf_counter() - t0
+        if cov is not None:
+            self._feed_coverage(cov, fb.log, plan)
         return CellResult(
             cell=cell,
             outputs={n: b.array.copy() for n, b in fb.mem.buffers.items()},
@@ -378,16 +405,31 @@ class CoVerifySession:
             error=err,
             faults=list(plan.events) if plan is not None else [],
             profile=fb.profiler(cell.label) if self.profile else None,
+            coverage=cov,
         )
+
+    @staticmethod
+    def _feed_coverage(cov: CoverageModel, log, plan: Optional[FaultPlan],
+                       ) -> None:
+        """Feed one finished cell's transaction stream + fault trace into
+        its private coverage model (burst/congestion/fault-kind bins)."""
+        for tx in log.txs:
+            cov.hit_burst(tx.nbytes)
+            cov.hit_congestion(tx.stall)
+        for ev in (plan.events if plan is not None else []):
+            if ev.layer == "bridge":
+                cov.hit("fault_kind", ev.kind)
 
     def _run_fabric_cell(self, cell: SweepCell,
                          plan: Optional[FaultPlan]) -> CellResult:
         """One cell on a FabricCluster: the firmware shards the op across
         ``cell.devices`` devices and the *host-visible gathered state* is
         what enters the cross-scale equivalence group."""
+        cov = CoverageModel() if self.coverage is not None else None
         fab = FabricCluster(cell.devices, congestion=cell.congestion,
                             link_config=self.link_config, fault_plan=plan,
-                            profile=self.profile, topology=cell.topology)
+                            profile=self.profile, topology=cell.topology,
+                            coverage=cov)
         fab.register_op(cell.op, **self._ops[cell.op])
         fw = self.fabric_firmware or self.firmware
         t0 = time.perf_counter()
@@ -397,6 +439,10 @@ class CoVerifySession:
         except Exception as e:            # cell failure must not kill sweep
             err = f"{type(e).__name__}: {e}"
         dt = time.perf_counter() - t0
+        if cov is not None:
+            for ev in fab.fault_events():
+                if ev.layer == "bridge":
+                    cov.hit("fault_kind", ev.kind)
         return CellResult(
             cell=cell,
             outputs=fab.outputs(),
@@ -409,6 +455,7 @@ class CoVerifySession:
             faults=fab.fault_events(),
             links=fab.link_stats(),
             profile=fab.profiler(cell.label) if self.profile else None,
+            coverage=cov,
         )
 
     def run(self, max_workers: Optional[int] = None,
@@ -431,9 +478,19 @@ class CoVerifySession:
         if max_workers == 1 or len(self.cells) <= 1:
             results = [self._run_cell(c) for c in self.cells]
         else:
+            # ex.map preserves submission order, so `results` is in cell
+            # order regardless of which thread finishes first — report
+            # rows, equivalence groups, divergence attachments, and the
+            # coverage merge below are completion-order independent
             with ThreadPoolExecutor(max_workers=max_workers) as ex:
                 results = list(ex.map(self._run_cell, self.cells))
         wall = time.perf_counter() - t0
+        if self.coverage is not None:
+            # deterministic join: merge each cell's private model into the
+            # session sink in cell order (never concurrently)
+            for r in results:
+                if r.coverage is not None:
+                    self.coverage.merge(r.coverage)
 
         groups: Dict[Tuple, Dict[str, Dict[str, np.ndarray]]] = {}
         members: Dict[Tuple, Dict[str, SweepCell]] = {}
@@ -465,7 +522,7 @@ class CoVerifySession:
                     divergences[labels[key]] = (   # never fail the sweep
                         f"bisect unavailable: {type(e).__name__}: {e}")
         return SweepReport(cells=results, equivalence=eq, wall_seconds=wall,
-                           divergences=divergences)
+                           divergences=divergences, coverage=self.coverage)
 
     def _bisect_cells(self, cell_a: SweepCell, cell_b: SweepCell,
                       checkpoint_interval: int = 8):

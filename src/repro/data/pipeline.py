@@ -15,6 +15,9 @@ import jax
 from repro.core.transactions import Transaction, TransactionLog
 
 
+_WORKER_ERROR = object()        # queue sentinel: worker died with an error
+
+
 class DataPipeline:
     def __init__(self, dataset, start_step: int = 0, prefetch: int = 2,
                  shardings: Any = None,
@@ -25,25 +28,49 @@ class DataPipeline:
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._step = start_step
         self._stop = threading.Event()
+        self._error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _worker(self):
+        # An exception anywhere in the produce path (dataset.batch,
+        # device_put) used to kill this thread silently: prefetch just
+        # ended and the consumer's next() blocked forever.  Now the error
+        # is parked on the pipeline and a sentinel is queued so the
+        # consumer re-raises it on its next get.
         step = self._step
-        while not self._stop.is_set():
-            batch = self.dataset.batch(step)
-            if self.shardings is not None:
-                batch = jax.device_put(batch, self.shardings)
-            try:
-                self._q.put((step, batch), timeout=1.0)
-            except queue.Full:
-                if self._stop.is_set():
+        try:
+            while not self._stop.is_set():
+                batch = self.dataset.batch(step)
+                if self.shardings is not None:
+                    batch = jax.device_put(batch, self.shardings)
+                try:
+                    self._q.put((step, batch), timeout=1.0)
+                except queue.Full:
+                    if self._stop.is_set():
+                        return
+                    continue
+                step += 1
+        except BaseException as e:
+            self._error = e
+            while not self._stop.is_set():
+                try:
+                    self._q.put((_WORKER_ERROR, None), timeout=1.0)
                     return
-                continue
-            step += 1
+                except queue.Full:
+                    continue
 
     def next(self):
         step, batch = self._q.get()
+        if step is _WORKER_ERROR:
+            # put the sentinel back so every subsequent next() also raises
+            # instead of hanging on the dead worker
+            try:
+                self._q.put_nowait((_WORKER_ERROR, None))
+            except queue.Full:
+                pass
+            raise RuntimeError(
+                "data pipeline worker failed") from self._error
         if self.log is not None:
             nbytes = sum(v.nbytes for v in jax.tree.leaves(batch))
             self.log.log(Transaction(float(step), "host_data", "read", 0,

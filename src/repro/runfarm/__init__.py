@@ -1,0 +1,25 @@
+"""Run-farm campaign orchestration (docs/runfarm.md; ROADMAP item 2).
+
+Shards fuzz batches, co-verify sweep slices, and golden-trace
+regeneration across worker processes with a resumable JSONL result
+store, uid-ordered coverage merging, coverage-guided generation
+scheduling, and worker-side failure harvesting — same campaign seed ⇒
+same merged digest at any worker count.
+"""
+from repro.runfarm.builtin import EXECUTORS, execute_unit
+from repro.runfarm.manager import (CampaignInterrupted, CampaignManager,
+                                   CampaignResult)
+from repro.runfarm.report import campaign_report, deterministic_view, \
+    write_report
+from repro.runfarm.store import ResultStore
+from repro.runfarm.units import (UnitResult, WorkUnit, fork_seed,
+                                 fuzz_units, golden_units, mutate_unit,
+                                 sweep_units, unit_uid)
+
+__all__ = [
+    "CampaignInterrupted", "CampaignManager", "CampaignResult",
+    "EXECUTORS", "ResultStore", "UnitResult", "WorkUnit",
+    "campaign_report", "deterministic_view", "execute_unit", "fork_seed",
+    "fuzz_units", "golden_units", "mutate_unit", "sweep_units",
+    "unit_uid", "write_report",
+]

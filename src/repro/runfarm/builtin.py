@@ -1,0 +1,187 @@
+"""Built-in work-unit executors: fuzz batches, co-verify sweep slices,
+golden-trace regeneration.
+
+Every executor is a pure function of its ``WorkUnit`` — fresh fuzzer /
+session / coverage model per call, nothing read from ambient state — so a
+unit executes bit-identically in the sequential oracle (``workers=0``)
+and in any spawned worker process.  Imports are deliberately lazy: a
+registers-layer fuzz worker never touches jax, which keeps spawn-context
+worker start-up fast.
+
+Failure harvesting happens HERE, worker-side, where the failing state is
+live: a failing fuzz scenario is minimized with the existing
+``ProtocolFuzzer.shrink`` (checkpointed replay, core/replay.py) and a
+divergent sweep group is localized by the scheduler's
+``bisect_divergence`` lane; the shrunk repro rides back to the manager in
+``UnitResult.harvest`` and lands in the campaign's ``bundles/``.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Callable, Dict
+
+from repro.runfarm.units import UnitResult, WorkUnit
+
+
+def execute_unit(unit: WorkUnit) -> UnitResult:
+    """Run one unit under its registered executor (timed)."""
+    try:
+        fn = EXECUTORS[unit.kind]
+    except KeyError:
+        raise KeyError(f"no executor for unit kind {unit.kind!r} "
+                       f"(known: {sorted(EXECUTORS)})") from None
+    t0 = time.perf_counter()
+    res = fn(unit)
+    res.seconds = time.perf_counter() - t0
+    return res
+
+
+# ---------------------------------------------------------- fuzz batches
+def _planted_table(index, delta):
+    """No-jit variant of core/fuzz.planted_bug_table: the same known
+    interpret-backend divergence, but on the un-jitted backend table so
+    fuzz workers stay trace-compilation-free."""
+    import numpy as np
+
+    from repro.core.fuzz import ProtocolFuzzer
+    from repro.kernels.systolic_matmul.sweep import matmul_backends
+    table = matmul_backends(tile=ProtocolFuzzer.TILE, jit=False)
+    good = table["interpret"]
+
+    def buggy(a, b):
+        out = np.array(good(a, b))
+        out[int(index[0]), int(index[1])] += delta
+        return out
+    return dict(table, interpret=buggy)
+
+
+def _run_fuzz_batch(unit: WorkUnit) -> UnitResult:
+    from repro.core.coverage import CoverageModel
+    from repro.core.fuzz import ProtocolFuzzer
+    p = unit.params
+    kw = {}
+    if p.get("rates"):
+        kw["rates"] = dict(p["rates"])
+    if p.get("bridge_ops"):
+        kw["bridge_ops"] = tuple(p["bridge_ops"])
+    if p.get("mm_bug"):
+        i, j, delta = p["mm_bug"]
+        kw["mm_table"] = _planted_table((i, j), float(delta))
+    cov = CoverageModel()
+    fz = ProtocolFuzzer(seed=unit.seed, layers=tuple(p["layers"]),
+                        coverage=cov, **kw)
+    report = fz.run(int(p["count"]))
+    failing = report.failures()
+    harvest = None
+    if failing and p.get("shrink_failures", True):
+        # minimize the FIRST failing scenario (checkpointed-replay shrink
+        # for bridge scenarios, linear prefix search otherwise) — the
+        # batch is seed-closed, so the bundle alone reproduces it
+        r0 = failing[0]
+        scn = fz.scenario(r0.index)
+        sub, res = fz.shrink(scn)
+        harvest = {"scenario": r0.index, "layer": r0.layer,
+                   "seed": unit.seed,
+                   "full_ops": len(scn.ops), "shrunk_ops": len(sub.ops),
+                   "ops": [repr(op) for op in sub.ops],
+                   "failures": res.failures[:4]}
+    return UnitResult(
+        uid=unit.uid, kind=unit.kind, ok=report.passed,
+        digest=report.digest, counts=cov.to_counts(),
+        scenarios=len(report.results),
+        failures=[f"scn{r.index}[{r.layer}]: {r.failures[0]}"
+                  for r in failing][:8],
+        harvest=harvest)
+
+
+# ------------------------------------------------------------ sweep cells
+def _run_sweep(unit: WorkUnit) -> UnitResult:
+    import numpy as np
+
+    from repro.core import CongestionConfig, CoVerifySession
+    from repro.core.coverage import CoverageModel
+    from repro.core.fuzz import FaultPlan
+    from repro.kernels.systolic_matmul.sweep import (matmul_backends,
+                                                     matmul_firmware)
+    p = unit.params
+    table = matmul_backends(jit=False)
+    interp = table["interpret"]
+    if p.get("mm_bug"):
+        bi, bj, delta = p["mm_bug"]
+        good = interp
+
+        def interp(a, b, _good=good, _i=int(bi), _j=int(bj),
+                   _d=float(delta)):
+            out = np.array(_good(a, b))
+            out[_i, _j] += _d
+            return out
+    cov = CoverageModel()
+    sess = CoVerifySession(
+        matmul_firmware,
+        congestion=CongestionConfig(seed=int(p.get("congestion_seed", 7))),
+        fault_plan=FaultPlan(unit.seed), coverage=cov)
+    sess.register_op("mm", oracle=table["oracle"], interpret=interp)
+    for cfg in p["configs"]:
+        for be in p.get("backends", ("oracle", "interpret")):
+            sess.add_cell("mm", be, dict(cfg))
+    # in-unit max_workers=1: parallelism is the FARM's axis; the unit
+    # itself stays the sequential oracle (bisect_failures localizes any
+    # divergent group via the replay machinery)
+    rep = sess.run(max_workers=1, bisect_failures=True)
+    h = hashlib.sha256()
+    for row in rep.to_rows(wall=False):
+        h.update(row.encode())
+        h.update(b"\n")
+    for r in rep.cells:
+        for name in sorted(r.outputs):
+            h.update(name.encode())
+            h.update(np.ascontiguousarray(r.outputs[name]).tobytes())
+    summary = rep.summary()
+    harvest = None
+    if summary["divergences"]:
+        harvest = {"seed": unit.seed, "divergences": summary["divergences"],
+                   "failures": summary["failures"]}
+    return UnitResult(
+        uid=unit.uid, kind=unit.kind, ok=rep.passed, digest=h.hexdigest(),
+        counts=cov.to_counts(), scenarios=len(rep.cells),
+        failures=summary["failures"][:8], harvest=harvest)
+
+
+# ------------------------------------------------------ golden-trace regen
+def _run_golden(unit: WorkUnit) -> UnitResult:
+    import importlib
+    try:
+        mod = importlib.import_module("tests.test_golden_traces")
+    except ModuleNotFoundError:
+        # sequential in-process lane with only src/ on the path: the
+        # golden suite lives at the repo root, one level above src/
+        import sys
+        from pathlib import Path
+
+        import repro
+        root = Path(next(iter(repro.__path__))).resolve().parents[1]
+        if str(root) not in sys.path:
+            sys.path.insert(0, str(root))
+        mod = importlib.import_module("tests.test_golden_traces")
+    name = unit.params["name"]
+    run = mod.TRACES[name]()
+    text = "\n".join(run.lines) + "\n"
+    golden_path = mod.GOLDEN / f"{name}.trace"
+    committed = golden_path.read_text() if golden_path.exists() else None
+    ok = text == committed
+    failures = [] if ok else [
+        f"regenerated trace diverges from committed {golden_path.name} "
+        f"({len(run.lines)} live lines vs "
+        f"{len(committed.splitlines()) if committed else 0} golden)"]
+    return UnitResult(
+        uid=unit.uid, kind=unit.kind, ok=ok,
+        digest=hashlib.sha256(text.encode()).hexdigest(),
+        counts={}, scenarios=1, failures=failures)
+
+
+EXECUTORS: Dict[str, Callable[[WorkUnit], UnitResult]] = {
+    "fuzz_batch": _run_fuzz_batch,
+    "sweep": _run_sweep,
+    "golden": _run_golden,
+}

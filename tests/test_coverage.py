@@ -100,6 +100,63 @@ def test_routed_fabric_closes_interconnect_coverage():
     assert cov.counts["credit_stall"]["waited"] > 0
 
 
+def test_hit_is_thread_safe_under_pool_hammering():
+    """Regression for the lost-update race: ``counts[g][b] += n`` is a
+    load/add/store read-modify-write, and CoVerifySession.run executes
+    cells on a ThreadPoolExecutor that may share one coverage sink — any
+    thread switch between the load and the store drops increments.  The
+    bin dict is instrumented with a Python-level ``__getitem__`` that
+    yields the GIL inside that window, turning the latent interleaving
+    into a deterministic one: pre-fix this loses ~half the hits; with the
+    per-model lock the totals are exact."""
+    import time
+    from concurrent.futures import ThreadPoolExecutor
+
+    class PreemptingDict(dict):
+        # a legal thread-switch point between the += load and store
+        def __getitem__(self, k):
+            v = dict.__getitem__(self, k)
+            time.sleep(0)
+            return v
+
+    cov = CoverageModel()
+    cov.counts["protocol"] = PreemptingDict(cov.counts["protocol"])
+    n_threads, n_hits = 8, 2_000
+
+    def hammer(_):
+        for _ in range(n_hits):
+            cov.hit("protocol", "doorbell_ok")
+    with ThreadPoolExecutor(max_workers=n_threads) as ex:
+        list(ex.map(hammer, range(n_threads)))
+    assert cov.counts["protocol"]["doorbell_ok"] == n_threads * n_hits
+
+
+def test_counts_roundtrip_and_new_bin_detection():
+    """Sparse snapshot round-trip (the runfarm's per-unit record format)
+    and merge_counts naming exactly the newly covered bins in
+    deterministic group.bin order."""
+    a = CoverageModel()
+    a.hit("protocol", "w1c_clear", 3)
+    a.hit("burst_size", "le_64B", 7)
+    counts = a.to_counts()
+    assert counts == {"protocol": {"w1c_clear": 3},
+                      "burst_size": {"le_64B": 7}}
+    b = CoverageModel.from_counts(counts)
+    assert b.counts == a.counts
+    merged = CoverageModel()
+    merged.hit("protocol", "w1c_clear")           # already covered
+    new = merged.merge_counts(counts)
+    assert new == ["burst_size.le_64B"]           # only the fresh bin
+    assert merged.counts["protocol"]["w1c_clear"] == 4
+    with pytest.raises(KeyError):                 # drift guard survives
+        merged.merge_counts({"protocol": {"bogus": 1}})
+    # models ship across processes: pickling drops and re-grows the lock
+    import pickle
+    c = pickle.loads(pickle.dumps(a))
+    assert c.counts == a.counts
+    c.hit("protocol", "poll_ok")
+
+
 def test_merge_accumulates():
     a, b = CoverageModel(), CoverageModel()
     a.hit("protocol", "w1c_clear", 2)

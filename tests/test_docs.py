@@ -66,6 +66,24 @@ def test_topology_docs_transcript():
     assert buf.getvalue().splitlines() == expected
 
 
+def test_runfarm_docs_transcript():
+    """The run-farm campaign transcript in docs/runfarm.md is the
+    verbatim output of examples/campaign.py (which itself asserts the
+    cross-process determinism bar before returning 0)."""
+    expected = _fenced_transcript(
+        DOCS / "runfarm.md",
+        "prints (deterministic — digests, unit counts, and coverage "
+        "only, no wall time):")
+    spec = importlib.util.spec_from_file_location(
+        "campaign", ROOT / "examples" / "campaign.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        assert mod.main([]) == 0
+    assert buf.getvalue().splitlines() == expected
+
+
 def test_performance_docs_transcript():
     """The simspeed selftest transcript in docs/performance.md is the
     verbatim output of benchmarks/bench_simspeed.py --selftest."""

@@ -87,3 +87,91 @@ def test_atomicity_no_tmp_dirs(tmp_path):
     mgr = CheckpointManager(tmp_path / "ck2", async_save=False)
     mgr.save(1, {"x": jnp.ones((2,))})
     assert not list((tmp_path / "ck2").glob("*.tmp"))
+
+
+def test_pipeline_worker_exception_propagates_to_consumer():
+    """Regression: an exception in the prefetch worker (dataset.batch or
+    device_put) silently ended prefetching and the consumer hung on an
+    empty queue forever.  The error must surface on the consumer's next
+    ``next()`` — and keep surfacing, never hang — while the batches
+    produced before the failure still arrive in order."""
+    from repro.data.pipeline import DataPipeline
+
+    class Dying:
+        def batch(self, step):
+            if step >= 3:
+                raise ValueError(f"corrupt shard at step {step}")
+            return {"x": np.full((4,), step, np.float32)}
+
+    pipe = DataPipeline(Dying(), prefetch=2)
+    try:
+        for want in range(3):
+            step, batch = pipe.next()
+            assert step == want
+            assert batch["x"][0] == want
+        with pytest.raises(RuntimeError, match="worker failed") as ei:
+            pipe.next()
+        assert isinstance(ei.value.__cause__, ValueError)
+        # subsequent calls re-raise instead of blocking on the dead worker
+        with pytest.raises(RuntimeError, match="worker failed"):
+            pipe.next()
+    finally:
+        pipe.stop()
+
+
+def test_async_write_failure_leaves_no_partial_checkpoint(tmp_path,
+                                                          monkeypatch):
+    """Regression: the async checkpoint thread used to die silently —
+    a failure mid-write left a stale ``.tmp`` on disk and the caller
+    never heard about it.  A simulated mid-``npz`` crash must (a) leave
+    NO partial step visible (neither committed nor staged) and (b)
+    re-raise on the next ``wait()``; the manager must then keep working."""
+    import repro.checkpoint.manager as mg
+
+    mgr = CheckpointManager(tmp_path / "ck3", async_save=True)
+    state = {"x": jnp.ones((4,))}
+    mgr.save(1, state)
+    mgr.wait()
+    assert mgr.list_steps() == [1]
+
+    real_savez = mg.np.savez
+
+    def boom(*a, **kw):
+        raise OSError("disk died mid-write")
+    monkeypatch.setattr(mg.np, "savez", boom)
+    mgr.save(2, state)
+    with pytest.raises(OSError, match="disk died"):
+        mgr.wait()
+    # nothing partial is visible: no step_2, no staging dir
+    assert mgr.list_steps() == [1]
+    assert not list((tmp_path / "ck3").glob("*.tmp"))
+    # the error does not wedge the manager: the next save commits
+    monkeypatch.setattr(mg.np, "savez", real_savez)
+    mgr.save(3, state)
+    mgr.wait()
+    assert mgr.list_steps() == [1, 3]
+
+
+def test_checkpoint_context_manager_flushes_and_raises(tmp_path,
+                                                       monkeypatch):
+    """``with CheckpointManager(...)`` joins the in-flight write on exit
+    and surfaces its error — an interpreter heading for exit can no
+    longer truncate a checkpoint silently."""
+    import repro.checkpoint.manager as mg
+
+    with CheckpointManager(tmp_path / "ck4", async_save=True) as mgr:
+        mgr.save(1, {"x": jnp.ones((2,))})
+    assert mgr.list_steps() == [1]              # flushed on clean exit
+
+    monkeypatch.setattr(mg.np, "savez",
+                        lambda *a, **kw: (_ for _ in ()).throw(
+                            OSError("late failure")))
+    with pytest.raises(OSError, match="late failure"):
+        with CheckpointManager(tmp_path / "ck5", async_save=True) as mgr2:
+            mgr2.save(1, {"x": jnp.ones((2,))})
+    assert mgr2.list_steps() == []
+    # an exception already unwinding is NOT masked by a write error
+    with pytest.raises(RuntimeError, match="caller error"):
+        with CheckpointManager(tmp_path / "ck6", async_save=True) as mgr3:
+            mgr3.save(1, {"x": jnp.ones((2,))})
+            raise RuntimeError("caller error")

@@ -157,6 +157,60 @@ def test_sequential_and_batched_agree():
             np.testing.assert_array_equal(a.outputs[name], b.outputs[name])
 
 
+def test_report_is_independent_of_thread_completion_order():
+    """Satellite regression: on a seeded 20-cell sweep (faults + online
+    congestion + a coverage sink + one planted divergence), report rows,
+    equivalence verdicts, divergence attachments, and the merged coverage
+    model must be byte-identical between ``max_workers=1`` and
+    ``max_workers=8`` — thread completion order may change wall-clock
+    only, never any reported artifact (the run-farm digests depend on
+    this)."""
+    from repro.core import CoverageModel
+    from repro.core.fuzz import FaultPlan
+
+    configs = ([{"size": 32, "tile": t} for t in (4, 8, 16, 32)]
+               + [{"size": 64, "tile": t} for t in (8, 16, 32, 64)]
+               + [{"size": 96, "tile": 32}, {"size": 96, "tile": 48}])
+
+    def run(max_workers):
+        table = matmul_backends(jit=False)
+
+        def interp(a, b):
+            out = np.array(table["interpret"](a, b))
+            if out.shape[0] == 96:
+                out[1, 2] += 1.0          # planted divergence, size-96 only
+            return out
+
+        cov = CoverageModel()
+        sess = CoVerifySession(_firmware,
+                               congestion=CongestionConfig(seed=7),
+                               fault_plan=FaultPlan(seed=11),
+                               coverage=cov)
+        sess.register_op("mm", oracle=table["oracle"], interpret=interp)
+        cells = sess.add_sweep("mm", ("oracle", "interpret"), configs)
+        assert len(cells) == 20
+        return sess.run(max_workers=max_workers), cov
+
+    seq, cov_seq = run(1)
+    par, cov_par = run(8)
+    # modeled rows: byte-identical once the wall-clock column is masked
+    assert seq.to_rows(wall=False) == par.to_rows(wall=False)
+    # equivalence verdicts + localized divergence attachments
+    s, p = seq.summary(), par.summary()
+    for k in ("cells", "groups", "passed", "failures", "divergences"):
+        assert s[k] == p[k], k
+    assert not seq.passed and len(s["divergences"]) == 2
+    # per-cell fault traces fork from the cell label, not pool order
+    assert [[e.key() for e in r.faults] for r in seq.cells] == \
+        [[e.key() for e in r.faults] for r in par.cells]
+    # merged functional coverage: exact counts, not just covered-bins
+    assert cov_seq.counts == cov_par.counts
+    assert cov_seq.covered("burst_size"), cov_seq.holes("burst_size")
+    assert sum(cov_seq.counts["congestion"].values()) > 0
+    assert sum(cov_seq.counts["fault_kind"].values()) > 0
+    assert seq.coverage is cov_seq and par.coverage is cov_par
+
+
 # ------------------------------------------------- per-tile burst lists
 def _check_bursts(txs, n_engines_min=2):
     assert txs, "burst list is empty"
