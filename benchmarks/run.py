@@ -34,7 +34,7 @@ def main() -> None:
                             bench_debug_iteration, bench_fabric_scaling,
                             bench_fuzz, bench_hls4ml_scaling,
                             bench_profiler, bench_replay, bench_runfarm,
-                            bench_simspeed)
+                            bench_serving, bench_simspeed)
     from benchmarks import roofline as roofline_mod
 
     print("name,us_per_call,derived")
@@ -49,6 +49,7 @@ def main() -> None:
     _run("profiler_overhead", bench_profiler.run)   # quick mode
     _run("simspeed", bench_simspeed.run)            # quick mode
     _run("runfarm_scaling", bench_runfarm.run)      # quick mode
+    _run("serving_slo", bench_serving.run)          # quick mode
 
     def _roofline():
         recs = roofline_mod.load("baseline")

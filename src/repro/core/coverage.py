@@ -15,6 +15,8 @@ so the bin set cannot silently drift from the stimulus generators:
                 sets together)
   fabric      — multi-device interconnect operations (core/fabric.py)
   serving     — serving-submit protocol outcomes (fuzz serving layer)
+  arrivals    — open-loop arrival/admission outcomes (serving/arrivals.py
+                process shapes + KV-pool admission-control events)
   topology    — interconnect shape a fabric run routed through
                 (crossbar default or a core/topology.py builder)
   hops        — switch-hop count per routed journey (h0 = endpoints on
@@ -42,6 +44,11 @@ FAULT_BINS = ("dma_delay", "dma_reorder", "dma_split", "bitflip_read",
 FABRIC_BINS = ("dev_copy", "scatter", "broadcast", "gather", "all_reduce")
 SERVING_BINS = ("ok", "bad_len", "zero_maxnew", "dup_rid", "over_budget",
                 "max_maxnew", "pad_straddle")
+# open-loop arrival-process outcomes (serving/arrivals.py): which process
+# shapes ran, whether admission control ever deferred, whether the pool
+# saturated, and whether a doorbell-time infeasible request was rejected
+ARRIVALS_BINS = ("poisson", "bursty", "replay", "deferred", "pool_full",
+                 "infeasible_reject")
 # crossbar plus core/topology.py's TOPOLOGY_KINDS (tests pin the two sets)
 TOPOLOGY_BINS = ("crossbar", "ring", "torus2d", "fat_tree")
 HOP_BINS = ("h0", "h1", "h2", "h3plus")
@@ -54,6 +61,7 @@ GROUPS: Dict[str, Tuple[str, ...]] = {
     "fault_kind": FAULT_BINS,
     "fabric": FABRIC_BINS,
     "serving": SERVING_BINS,
+    "arrivals": ARRIVALS_BINS,
     "topology": TOPOLOGY_BINS,
     "hops": HOP_BINS,
     "credit_stall": CREDIT_BINS,

@@ -425,7 +425,7 @@ class ProtocolFuzzer:
     failing op prefix.
     """
 
-    LAYERS = ("bridge", "registers", "serving")
+    LAYERS = ("bridge", "registers", "serving", "arrivals")
     SIZES = (32, 48, 64)        # matmul sizes for bridge scenarios
     TILE = 16
 
@@ -480,7 +480,8 @@ class ProtocolFuzzer:
         layer = self.layers[i % len(self.layers)]
         rng = self.plan.fork(f"gen/{i}").rng
         gen = {"bridge": self._gen_bridge, "registers": self._gen_registers,
-               "serving": self._gen_serving}[layer]
+               "serving": self._gen_serving,
+               "arrivals": self._gen_arrivals}[layer]
         return Scenario(i, layer, gen(rng))
 
     def _gen_bridge(self, rng: np.random.Generator) -> List[Tuple]:
@@ -560,10 +561,54 @@ class ProtocolFuzzer:
             ops.append((k, use, ln, mx, prompt))
         return ops
 
+    def _gen_arrivals(self, rng: np.random.Generator) -> List[Tuple]:
+        """Hostile open-loop arrival stream + a randomized KV page-pool
+        geometry.  Op 0 is the pool config; each following op is one
+        arrival ``(kind, rid, time, prompt, max_new)``.  Kinds: "ok"
+        (feasible, Poisson-ish gap), "burst" (feasible, zero gap — lands
+        simultaneously with its predecessor), "infeasible" (worst-case
+        footprint exceeds the WHOLE pool — must be rejected at the
+        doorbell, never deferred forever).  The op list shrinks by prefix
+        like every other layer (the pool config op always survives)."""
+        eng = self._serving_engine()
+        max_len, pad = eng.max_len, eng.prompt_pad
+        page_size = int(rng.choice((4, 8)))
+        n_pages = int(rng.integers(2, 7))
+        pool_entries = n_pages * page_size
+        cap = min(pool_entries, max_len)
+        ln_cap = max(1, (cap // pad) * pad)     # pad_len(ln_cap) <= cap
+        ops: List[Tuple] = [("pool", n_pages, page_size)]
+        kinds = ["ok", "ok", "ok", "burst", "infeasible"]
+        t, rid = 0.0, 0
+        for _ in range(int(rng.integers(2, 9))):
+            k = str(rng.choice(kinds))
+            t = round(t + (0.0 if k == "burst"
+                           else float(rng.exponential(150.0))), 6)
+            ln = int(rng.integers(1, ln_cap + 1))
+            pl = eng._pad_len(ln)
+            if k == "infeasible":
+                # footprint pl + mx - 1 in (pool_entries, max_len]: pool-
+                # infeasible but inside the engine's KV capacity, so the
+                # rejection exercised is the PAGE-POOL one
+                lo, hi = pool_entries - pl + 2, max_len - pl + 1
+                if pool_entries >= max_len or lo < 1 or lo > hi:
+                    k = "ok"
+                else:
+                    mx = int(rng.integers(lo, hi + 1))
+            if k != "infeasible":
+                budget = cap - pl + 1
+                mx = int(rng.integers(1, min(6, budget) + 1))
+            prompt = tuple(int(x) for x in
+                           rng.integers(1, eng.cfg.vocab_size, ln))
+            ops.append((k, rid, t, prompt, mx))
+            rid += 1
+        return ops
+
     # ---------------------------------------------------------- execution
     def run_scenario(self, scn: Scenario) -> ScenarioResult:
         run = {"bridge": self._run_bridge, "registers": self._run_registers,
-               "serving": self._run_serving}[scn.layer]
+               "serving": self._run_serving,
+               "arrivals": self._run_arrivals}[scn.layer]
         return run(scn)
 
     def _cover_log(self, log: TransactionLog) -> None:
@@ -708,7 +753,9 @@ class ProtocolFuzzer:
     def _run_serving(self, scn: Scenario) -> ScenarioResult:
         eng = self._serving_engine()
         plan = self.plan.fork(f"{scn.label}/serve", scenario=scn.index)
-        eng.reset(fault_plan=plan)
+        # explicit storm/unpaged overrides: the shared engine may have run
+        # an arrivals scenario (continuous + paged) just before
+        eng.reset(fault_plan=plan, batching="storm", kv_pages=None)
         failures: List[str] = []
         expected_viol: List[str] = []
         accepted: Dict[int, int] = {}       # rid -> max_new_tokens
@@ -796,6 +843,89 @@ class ProtocolFuzzer:
             list(eng.csr.log.violations),
             _digest(scn.ops, _tx_tuples(eng.mem.log), tokens,
                     list(eng.csr.log.violations),
+                    [e.key() for e in faults]), len(eng.mem.log.txs))
+
+    def _run_arrivals(self, scn: Scenario) -> ScenarioResult:
+        """Open-loop admission-control differential: drive the scenario's
+        hostile arrival stream through a continuous-batching paged engine
+        and check the paging invariants — every feasible request retires
+        with exactly its token budget, every pool-infeasible request is
+        rejected at the doorbell (logged violation, never a silent drop or
+        an admission livelock), and after the drain every page is back in
+        the free pool."""
+        from repro.serving.arrivals import replayed_trace, run_open_loop
+        eng = self._serving_engine()
+        plan = self.plan.fork(f"{scn.label}/arrivals", scenario=scn.index)
+        _, n_pages, page_size = scn.ops[0]
+        eng.reset(fault_plan=plan, batching="continuous",
+                  kv_pages=n_pages, kv_page_size=page_size,
+                  kv_leak_every=0)
+        failures: List[str] = []
+        feasible: Dict[int, int] = {}       # rid -> max_new_tokens
+        infeasible: List[int] = []
+        entries = []
+        for kind, rid, t, prompt, mx in scn.ops[1:]:
+            entries.append((rid, t, prompt, mx))
+            if kind == "infeasible":
+                infeasible.append(rid)
+            else:
+                feasible[rid] = mx
+        trace = replayed_trace(entries)
+        try:
+            run_open_loop(eng, trace, max_ticks=5_000)
+        except RuntimeError as e:           # admission livelock / no drain
+            failures.append(f"open-loop run did not drain: {e}")
+        pool = eng.kv_pool
+        self.coverage.hit("arrivals", "replay")
+        if pool.deferrals:
+            self.coverage.hit("arrivals", "deferred", pool.deferrals)
+        if pool.peak_in_use == pool.n_pages:
+            self.coverage.hit("arrivals", "pool_full")
+        viols = list(eng.csr.log.violations)
+        rejected = [v for v in viols if "exceeds KV page pool" in v]
+        if infeasible:
+            self.coverage.hit("arrivals", "infeasible_reject",
+                              len(rejected))
+        if len(rejected) != len(infeasible):
+            failures.append(
+                f"{len(infeasible)} pool-infeasible requests, "
+                f"{len(rejected)} doorbell rejections: {viols}")
+        if len(viols) != len(rejected):
+            failures.append(f"unexpected protocol violations: {viols}")
+        for rid, mx in feasible.items():
+            req = eng.requests.get(rid)
+            if req is None or not req.done:
+                failures.append(f"feasible rid {rid} never completed")
+            elif len(req.out_tokens) != mx:
+                failures.append(
+                    f"rid {rid}: {len(req.out_tokens)} tokens emitted, "
+                    f"max_new_tokens={mx}")
+            elif not (req.t_submit <= req.t_admit <= req.t_first
+                      <= req.t_done):
+                failures.append(
+                    f"rid {rid}: non-monotone lifecycle stamps "
+                    f"{req.t_submit}/{req.t_admit}/{req.t_first}/"
+                    f"{req.t_done}")
+        for rid in infeasible:
+            if rid in eng.requests:
+                failures.append(f"infeasible rid {rid} leaked into the "
+                                f"request table")
+        if pool.n_free != pool.n_pages:
+            failures.append(f"page leak after drain: {pool.n_free}/"
+                            f"{pool.n_pages} free")
+        if pool.pages:
+            failures.append(f"requests still hold pages after drain: "
+                            f"{sorted(pool.pages)}")
+        self._cover_log(eng.mem.log)
+        faults = list(plan.events)
+        for ev in faults:
+            if ev.layer == "bridge":
+                self.coverage.hit("fault_kind", ev.kind)
+        tokens = [(rid, tuple(eng.requests[rid].out_tokens))
+                  for rid in sorted(feasible) if rid in eng.requests]
+        return ScenarioResult(
+            scn.index, "arrivals", not failures, failures, faults, viols,
+            _digest(scn.ops, _tx_tuples(eng.mem.log), tokens, viols,
                     [e.key() for e in faults]), len(eng.mem.log.txs))
 
     # ------------------------------------------------------------ driving

@@ -324,6 +324,27 @@ def _is_serving(target: Any) -> bool:
     return hasattr(target, "slots") and hasattr(target, "step")
 
 
+def _request_spans(engines) -> List[dict]:
+    """Completed continuous-batching request lifecycles as (queue,
+    prefill, decode) spans in modeled cycles.  Captured at profiler
+    construction — the profiler does not retain its target — from the
+    ``(device, engine)`` pairs given.  Storm-mode requests carry no
+    admission stamps (t_admit == -1) and are skipped, so legacy serving
+    profiles are unchanged."""
+    spans = []
+    for dev, eng in engines:
+        for rid, req in eng.requests.items():
+            if req.t_admit < 0 or req.t_done < 0:
+                continue                # storm-mode or still in flight
+            spans.append({"rid": int(rid), "device": int(dev),
+                          "t_submit": float(req.t_submit),
+                          "t_admit": float(req.t_admit),
+                          "t_first": float(req.t_first),
+                          "t_done": float(req.t_done),
+                          "tokens": len(req.out_tokens)})
+    return sorted(spans, key=lambda s: (s["t_submit"], s["rid"]))
+
+
 # ------------------------------------------------------------ the profiler
 class DataMovementProfiler:
     """Off-chip data-movement profiler (paper §IV, the third pillar).
@@ -347,6 +368,9 @@ class DataMovementProfiler:
         self.label = label
         self.channels: List[ChannelProfile] = []
         self.marks: List[Tuple[TransactionLog, OpMark]] = []
+        # serving targets only: completed request lifecycles (see
+        # _request_spans); empty for bridge/fabric targets
+        self.requests: List[dict] = []
         # resolve eagerly and do NOT retain the target: channels/marks
         # alias only logs and link timelines, so a profiled sweep cell
         # does not pin its bridge's DDR buffers for the report's lifetime
@@ -402,6 +426,7 @@ class DataMovementProfiler:
                     self.channels.append(_profile_clock(
                         f"e{i}/ddr", eng.mem, frozenset({eng.csr.name})))
                 self.channels.append(_profile_csr(f"e{i}/csr", eng.csr))
+            self.requests = _request_spans(enumerate(target.engines))
             self._primary_log = target.log
             return
         if _is_serving(target):
@@ -411,6 +436,7 @@ class DataMovementProfiler:
                 self.channels.append(_profile_clock(
                     "ddr", target.mem, frozenset({target.csr.name})))
             self.channels.append(_profile_csr("csr", target.csr))
+            self.requests = _request_spans([(0, target)])
             self._primary_log = target.mem.log
             return
         raise TypeError(f"no profiling mapping for "
@@ -510,6 +536,18 @@ class DataMovementProfiler:
                     f"{back.stall:.0f}")
         return rows
 
+    def request_rows(self) -> List[str]:
+        """Per-request lifecycle rows for continuous-batching serving
+        targets — the latency-SLO tier's raw material: one CSV row per
+        completed request with its queue/prefill/decode boundary stamps
+        (modeled cycles) and generated token count."""
+        rows = ["rid,device,t_submit,t_admit,t_first,t_done,tokens"]
+        for s in self.requests:
+            rows.append(f"{s['rid']},{s['device']},{s['t_submit']:.1f},"
+                        f"{s['t_admit']:.1f},{s['t_first']:.1f},"
+                        f"{s['t_done']:.1f},{s['tokens']}")
+        return rows
+
     def bandwidth_timeline(self, n_buckets: int = 50,
                            by_engine: bool = True):
         """Bucketed bandwidth-utilization series of the primary log —
@@ -603,6 +641,37 @@ class DataMovementProfiler:
                            "dur": round(max(m.t1 - m.t0, 1e-6), 6),
                            "pid": pid, "tid": 1,
                            "args": {"transactions": m.tx_hi - m.tx_lo}})
+        if self.requests:
+            # per-request lifecycle tracks (continuous-batching serving):
+            # one thread per request, queue/prefill/decode slices
+            pid = len(self.channels) + 1 + (1 if self.marks else 0)
+            ev.append({"ph": "M", "name": "process_name", "pid": pid,
+                       "args": {"name": f"{self.label}/requests"}})
+            for tid, s in enumerate(self.requests, start=1):
+                ev.append({"ph": "M", "name": "thread_name", "pid": pid,
+                           "tid": tid,
+                           "args": {"name": f"rid{s['rid']}"
+                                            f"@d{s['device']}"}})
+                if s["t_admit"] > s["t_submit"]:
+                    ev.append({"ph": "X", "cat": "queue", "name": "queue",
+                               "ts": round(s["t_submit"], 6),
+                               "dur": round(s["t_admit"] - s["t_submit"],
+                                            6),
+                               "pid": pid, "tid": tid,
+                               "args": {"rid": s["rid"]}})
+                ev.append({"ph": "X", "cat": "prefill", "name": "prefill",
+                           "ts": round(s["t_admit"], 6),
+                           "dur": round(max(s["t_first"] - s["t_admit"],
+                                            1e-6), 6),
+                           "pid": pid, "tid": tid,
+                           "args": {"rid": s["rid"]}})
+                ev.append({"ph": "X", "cat": "decode", "name": "decode",
+                           "ts": round(s["t_first"], 6),
+                           "dur": round(max(s["t_done"] - s["t_first"],
+                                            1e-6), 6),
+                           "pid": pid, "tid": tid,
+                           "args": {"rid": s["rid"],
+                                    "tokens": s["tokens"]}})
         return {
             "traceEvents": ev,
             "displayTimeUnit": "ms",

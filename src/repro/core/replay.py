@@ -70,6 +70,7 @@ __all__ = [
     "TimelineEvent", "Checkpoint", "OpTrace", "Recording", "ReplayWindow",
     "DebugSession", "Recorder", "RecordingBridge", "DivergenceReport",
     "bisect_divergence", "record_serving_storm", "serving_storm_program",
+    "record_open_loop", "open_loop_program",
     "apply_event", "target_logs", "state_summary", "window_report",
 ]
 
@@ -276,7 +277,7 @@ _TRACE_KEYS = frozenset({"log", "timeline"})
 # functionally when data actually differs
 _TIMING_KEYS = _TRACE_KEYS | frozenset({
     "time", "link", "host_link", "ports", "switch", "rng", "fault_plan",
-    "link_plan", "next", "rr", "written"})
+    "link_plan", "next", "rr", "written", "clock"})
 # keys whose subtrees hold USER data (buffer names, register addresses,
 # request ids) — exclusion must stop at their boundary, or a buffer that
 # happens to be named "time"/"link" would silently vanish from every
@@ -346,14 +347,22 @@ def state_summary(target: Any) -> Dict[str, Any]:
                "tokens": {rid: list(r.out_tokens)
                           for rid, r in sorted(target.requests.items())},
                "violations": len(target.violations)}
+        pools = {f"e{i}": e.kv_pool.n_free
+                 for i, e in enumerate(target.engines)
+                 if getattr(e, "kv_pool", None) is not None}
+        if pools:
+            out["kv_free_pages"] = pools
         return out
     if _is_serving(target):
-        return {"time": round(target.mem.time, 6),
-                "buffers": bufs(target.mem),
-                "completed": target.completed,
-                "tokens": {rid: list(r.out_tokens)
-                           for rid, r in sorted(target.requests.items())},
-                "violations": len(target.mem.log.violations)}
+        out = {"time": round(target.mem.time, 6),
+               "buffers": bufs(target.mem),
+               "completed": target.completed,
+               "tokens": {rid: list(r.out_tokens)
+                          for rid, r in sorted(target.requests.items())},
+               "violations": len(target.mem.log.violations)}
+        if getattr(target, "kv_pool", None) is not None:
+            out["kv_free_pages"] = {"e0": target.kv_pool.n_free}
+        return out
     raise TypeError(f"no replay summary for {type(target).__name__}")
 
 
@@ -432,6 +441,8 @@ def _apply_serving(eng: Any, ev: TimelineEvent) -> Any:
                             strict=a[4] if len(a) > 4 else False)
     if k == "step":
         return eng.step()
+    if k == "advance":
+        return eng.advance_clock(a[0])
     raise ValueError(f"unknown serving event kind {k!r}")
 
 
@@ -701,6 +712,29 @@ def record_serving_storm(session: DebugSession,
     """Record a serving storm (single engine or cluster — same CSR
     surface) as a replayable timeline."""
     return session.record(serving_storm_program(reqs, max_ticks))
+
+
+def open_loop_program(trace: Any, max_ticks: int = 200_000) -> Callable:
+    """Build a recording program for an open-loop serving run: the
+    arrival trace is driven through ``serving.arrivals.drive_open_loop``
+    — the SAME decision loop the live driver uses, with ``rec.do`` as the
+    event sink — so a recorded run and a live run of one trace emit
+    identical timelines (submissions, idle-gap ``advance`` events,
+    scheduler ticks)."""
+    from repro.serving.arrivals import drive_open_loop
+
+    def program(rec: Recorder) -> None:
+        drive_open_loop(rec.do, rec.target, trace, max_ticks)
+        rec.checkpoint()
+
+    return program
+
+
+def record_open_loop(session: DebugSession, trace: Any,
+                     max_ticks: int = 200_000) -> Recording:
+    """Record an open-loop serving run (single engine or cluster in
+    continuous-batching mode) as a replayable timeline."""
+    return session.record(open_loop_program(trace, max_ticks))
 
 
 # ---------------------------------------------------------------- bisection

@@ -111,6 +111,11 @@ class SweepCell:
     fault_plan: Optional[FaultPlan] = None
     devices: int = 1
     topology: Optional[Any] = None
+    # open-loop serving lane (serving/arrivals.py): when set, the cell is
+    # an open-loop serving run driven by this ArrivalTrace instead of a
+    # firmware run — outputs are the generated token streams, which join
+    # the same cross-backend/cross-scale equivalence machinery
+    serving: Optional[Any] = None
 
     @property
     def _topo_kind(self) -> Optional[str]:
@@ -125,6 +130,15 @@ class SweepCell:
         dev = f"x{self.devices}dev" if self.devices > 1 else ""
         topo = f"@{self._topo_kind}" if self.topology is not None else ""
         return f"{self.op}[{cfg}]@{self.backend}{dev}{topo}"
+
+    @property
+    def timing_label(self) -> str:
+        """Backend-FREE cell identity: the fault-fork label for serving
+        cells, so one configuration's fault stream — and therefore its SLO
+        rows and log digest — is identical across backends (the
+        determinism tier in tests/test_serving_slo.py diffs them)."""
+        cfg = ",".join(f"{k}={v}" for k, v in sorted(self.config.items()))
+        return f"{self.op}[{cfg}]x{self.devices}dev"
 
     @property
     def group_member(self) -> str:
@@ -159,6 +173,10 @@ class CellResult:
     # cannot interleave, and run() merges them in cell order at join —
     # the merged result is identical at any max_workers
     coverage: Optional[CoverageModel] = None
+    # latency-SLO report (serving/slo.py) when the cell was an open-loop
+    # serving run: p50/p99 TTFT + inter-token latency in modeled cycles,
+    # surfaced as extra to_rows columns
+    slo: Optional[Any] = None
 
     @property
     def link_stall(self) -> float:
@@ -235,9 +253,15 @@ class SweepReport:
         what the run-farm digests and the ordering-determinism regression
         test compare."""
         from repro.core.profiler import CATEGORIES
-        rows = ["cell,backend,devices,seconds,bridge_cycles,stall_cycles,"
-                "link_stall_cycles,utilization,"
-                + ",".join(f"{c}_cycles" for c in CATEGORIES) + ",status"]
+        # SLO columns appear only when the sweep contains open-loop serving
+        # cells — pure-compute sweeps keep today's schema byte-identically
+        with_slo = any(r.slo is not None for r in self.cells)
+        header = ("cell,backend,devices,seconds,bridge_cycles,stall_cycles,"
+                  "link_stall_cycles,utilization,"
+                  + ",".join(f"{c}_cycles" for c in CATEGORIES))
+        if with_slo:
+            header += ",p50_ttft,p99_ttft,p50_itl,p99_itl,tok_per_kcyc"
+        rows = [header + ",status"]
         for r in self.cells:
             stall = (sum(r.congestion.per_engine_stall.values())
                      if r.congestion else 0.0)
@@ -249,6 +273,14 @@ class SweepReport:
                                         for c in CATEGORIES))
             else:
                 prof_cols = "-," + ",".join("-" for _ in CATEGORIES)
+            if with_slo:
+                if r.slo is not None:
+                    s = r.slo
+                    prof_cols += (f",{s.p50_ttft():.1f},{s.p99_ttft():.1f},"
+                                  f"{s.p50_itl():.1f},{s.p99_itl():.1f},"
+                                  f"{s.tokens_per_kcycle():.3f}")
+                else:
+                    prof_cols += ",-,-,-,-,-"
             secs = f"{r.seconds:.3f}" if wall else "-"
             rows.append(f"{r.cell.op},{r.cell.backend},{r.cell.devices},"
                         f"{secs},{r.bridge_time:.0f},{stall:.0f},"
@@ -333,6 +365,8 @@ class CoVerifySession:
         self.link_config = link_config
         self._ops: Dict[str, Dict[str, Any]] = {}
         self.cells: List[SweepCell] = []
+        # open-loop serving lane (register_serving/add_serving_cell)
+        self._serving_factory: Optional[Callable[..., Any]] = None
 
     # ------------------------------------------------------------- setup
     def register_op(self, name: str, *, oracle: Callable,
@@ -343,6 +377,37 @@ class CoVerifySession:
         cell in the sweep (the compiled-executable cache)."""
         self._ops[name] = dict(oracle=oracle, interpret=interpret,
                                compiled=compiled, burst_list=burst_list)
+
+    def register_serving(self, factory: Callable[..., Any]) -> None:
+        """Register the serving-target builder for open-loop serving
+        cells: ``factory(backend, devices, fault_plan)`` returns a
+        continuous-batching ``ServingEngine`` (devices == 1) or
+        ``ClusterServingEngine`` — typically sharing one jitted
+        prefill/decode pair across all cells, like ``register_op``
+        shares backend executables."""
+        self._serving_factory = factory
+
+    def add_serving_cell(self, backend: str, trace: Any, *,
+                         devices: int = 1,
+                         config: Optional[Dict[str, Any]] = None,
+                         fault_plan: Optional[FaultPlan] = None
+                         ) -> SweepCell:
+        """Append one open-loop serving cell: drive ``trace`` (an
+        ``ArrivalTrace``) against the registered serving target on
+        ``backend`` at ``devices`` scale.  Cells sharing a trace join one
+        equivalence group — generated token streams must match across
+        backends AND device counts — and each cell's ``CellResult.slo``
+        carries the latency-SLO report (extra ``to_rows`` columns)."""
+        if self._serving_factory is None:
+            raise RuntimeError("no serving factory registered "
+                               "(call register_serving first)")
+        cfg = dict(config or {})
+        cfg.setdefault("trace", trace.label)
+        cell = SweepCell("serving", backend, cfg, None,
+                         fault_plan or self.fault_plan, devices=devices,
+                         serving=trace)
+        self.cells.append(cell)
+        return cell
 
     def add_cell(self, op: str, backend: str,
                  config: Optional[Dict[str, Any]] = None,
@@ -376,6 +441,8 @@ class CoVerifySession:
 
     # ----------------------------------------------------------- execute
     def _run_cell(self, cell: SweepCell) -> CellResult:
+        if cell.serving is not None:
+            return self._run_serving_cell(cell)
         # each cell forks its own child plan keyed by the cell label, so
         # thread-pool scheduling order cannot perturb the fault stream
         plan = (cell.fault_plan.fork(cell.label)
@@ -419,6 +486,74 @@ class CoVerifySession:
         for ev in (plan.events if plan is not None else []):
             if ev.layer == "bridge":
                 cov.hit("fault_kind", ev.kind)
+
+    def _run_serving_cell(self, cell: SweepCell) -> CellResult:
+        """One open-loop serving cell: build the target via the registered
+        factory, drive the arrival trace through the shared decision loop,
+        and collect the SLO report.  The fault plan forks by the
+        backend-FREE ``timing_label`` — one configuration has ONE fault
+        stream, so SLO rows and log digests are comparable across
+        backends (the determinism tier's contract)."""
+        from repro.core.replay import target_logs
+        from repro.serving.arrivals import run_open_loop
+        from repro.serving.slo import SLOReport
+        trace = cell.serving
+        plan = (cell.fault_plan.fork(cell.timing_label)
+                if cell.fault_plan is not None else None)
+        cov = CoverageModel() if self.coverage is not None else None
+        t0 = time.perf_counter()
+        err: Optional[str] = None
+        slo = None
+        target = self._serving_factory(cell.backend, cell.devices, plan)
+        try:
+            run_open_loop(target, trace)
+            slo = SLOReport.from_run(trace, target, label=cell.label)
+        except Exception as e:            # cell failure must not kill sweep
+            err = f"{type(e).__name__}: {e}"
+        dt = time.perf_counter() - t0
+        violations = (list(target.violations)
+                      if hasattr(target, "violations")
+                      else list(target.mem.log.violations))
+        if cov is not None:
+            for log in target_logs(target):
+                for tx in log.txs:
+                    cov.hit_burst(tx.nbytes)
+                    cov.hit_congestion(tx.stall)
+            self._feed_arrival_coverage(cov, trace, target, violations)
+        # the equivalence payload: every completed request's token stream,
+        # compared exactly across backends and device counts
+        outputs = {f"tokens[{rid}]": np.asarray(req.out_tokens, np.int64)
+                   for rid, req in sorted(target.requests.items())
+                   if req.done}
+        return CellResult(
+            cell=cell,
+            outputs=outputs,
+            seconds=dt,
+            bridge_time=float(target.clock),
+            congestion=target.congestion_stats(),
+            violations=violations,
+            error=err,
+            faults=list(plan.events) if plan is not None else [],
+            profile=target.profiler(cell.label) if self.profile else None,
+            coverage=cov,
+            slo=slo,
+        )
+
+    @staticmethod
+    def _feed_arrival_coverage(cov: CoverageModel, trace: Any, target: Any,
+                               violations: List[str]) -> None:
+        """Arrival/admission coverage bins of one serving cell."""
+        cov.hit("arrivals", trace.kind)
+        engines = getattr(target, "engines", None) or [target]
+        pools = [e.kv_pool for e in engines
+                 if getattr(e, "kv_pool", None) is not None]
+        deferrals = sum(p.deferrals for p in pools)
+        if deferrals:
+            cov.hit("arrivals", "deferred", deferrals)
+        if any(p.peak_in_use == p.n_pages for p in pools):
+            cov.hit("arrivals", "pool_full")
+        if any("exceeds KV page pool" in v for v in violations):
+            cov.hit("arrivals", "infeasible_reject")
 
     def _run_fabric_cell(self, cell: SweepCell,
                          plan: Optional[FaultPlan]) -> CellResult:
@@ -533,6 +668,24 @@ class CoVerifySession:
         exact fault-plan fork and congestion link, so the recorded runs
         reproduce the sweep's bit-for-bit."""
         from repro.core import replay as rp
+        if cell_a.serving is not None and cell_b.serving is not None:
+            # open-loop serving cells replay through the shared decision
+            # loop; the recording's factory rebuilds the exact
+            # backend-free fault fork the sweep ran with
+            def record_serving(cell: SweepCell):
+                def factory():
+                    plan = (cell.fault_plan.fork(cell.timing_label)
+                            if cell.fault_plan is not None else None)
+                    return self._serving_factory(cell.backend,
+                                                 cell.devices, plan)
+                sess = rp.DebugSession(
+                    factory, label=cell.label,
+                    checkpoint_interval=checkpoint_interval)
+                return sess, rp.record_open_loop(sess, cell.serving)
+
+            sa, ra = record_serving(cell_a)
+            sb, rb = record_serving(cell_b)
+            return rp.bisect_divergence(sa, ra, sb, rb)
         if cell_a.devices != 1 or cell_b.devices != 1 \
                 or self.fabric_firmware is not None:
             raise ValueError("divergence bisection covers single-device "

@@ -14,12 +14,12 @@ from repro.runfarm.report import campaign_report, deterministic_view, \
 from repro.runfarm.store import ResultStore
 from repro.runfarm.units import (UnitResult, WorkUnit, fork_seed,
                                  fuzz_units, golden_units, mutate_unit,
-                                 sweep_units, unit_uid)
+                                 serving_units, sweep_units, unit_uid)
 
 __all__ = [
     "CampaignInterrupted", "CampaignManager", "CampaignResult",
     "EXECUTORS", "ResultStore", "UnitResult", "WorkUnit",
     "campaign_report", "deterministic_view", "execute_unit", "fork_seed",
-    "fuzz_units", "golden_units", "mutate_unit", "sweep_units",
-    "unit_uid", "write_report",
+    "fuzz_units", "golden_units", "mutate_unit", "serving_units",
+    "sweep_units", "unit_uid", "write_report",
 ]

@@ -148,6 +148,115 @@ def _run_sweep(unit: WorkUnit) -> UnitResult:
         failures=summary["failures"][:8], harvest=harvest)
 
 
+# --------------------------------------------------- open-loop serving SLO
+def _run_serving_campaign(unit: WorkUnit) -> UnitResult:
+    """One open-loop serving unit: regenerate the arrival trace from the
+    unit's forked seed (serving/arrivals.build_trace — the trace is pure
+    JSON + seed), drive it against a fresh continuous-batching engine with
+    a paged KV cache, and witness the run with ``SLOReport.digest()`` —
+    rows AND token streams, so any latency-model or behavioral drift flips
+    the campaign digest.  Admission invariants (exact token budgets, pool
+    fully drained) are checked worker-side where the engine is live."""
+    from repro.core.coverage import CoverageModel
+    from repro.core.replay import target_logs
+    from repro.serving import SLOReport, build_trace, run_open_loop
+
+    p = unit.params
+    trace = build_trace(p["kind"], unit.seed, **dict(p.get("trace") or {}))
+    pool = dict(p.get("pool") or {})
+    target = _serving_target(
+        devices=int(p.get("devices", 1)),
+        max_slots=int(pool.get("max_slots", 2)),
+        max_len=int(pool.get("max_len", 32)),
+        prompt_pad=int(pool.get("prompt_pad", 8)),
+        kv_pages=pool.get("kv_pages"),
+        kv_page_size=int(pool.get("kv_page_size", 8)))
+    failures = []
+    slo = None
+    try:
+        run_open_loop(target, trace,
+                      max_ticks=int(p.get("max_ticks", 50_000)))
+        slo = SLOReport.from_run(trace, target,
+                                 label=f"{unit.uid}:{trace.label}")
+    except Exception as e:
+        failures.append(f"{type(e).__name__}: {e}")
+    violations = (list(target.violations)
+                  if hasattr(target, "violations")
+                  else list(target.mem.log.violations))
+    engines = getattr(target, "engines", None) or [target]
+    # admission invariants: every admitted request retired with its exact
+    # decode budget, and every reserved page came back to the pool
+    rejected = {int(v.split()[1]) for v in violations
+                if "exceeds KV page pool" in v}
+    for a in trace.arrivals:
+        req = target.requests.get(a.rid)
+        if a.rid in rejected:
+            if req is not None:
+                failures.append(f"rejected rid {a.rid} holds a slot")
+            continue
+        if req is None or not req.done:
+            failures.append(f"admitted rid {a.rid} never retired")
+        elif len(req.out_tokens) != a.max_new_tokens:
+            failures.append(
+                f"rid {a.rid}: {len(req.out_tokens)} tokens != "
+                f"budget {a.max_new_tokens}")
+    for i, eng in enumerate(engines):
+        kp = eng.kv_pool
+        if kp is not None and (kp.n_free != kp.n_pages or kp.pages):
+            failures.append(f"engine {i} leaked KV pages: "
+                            f"{kp.n_free}/{kp.n_pages} free after drain")
+    cov = CoverageModel()
+    for log in target_logs(target):
+        for tx in log.txs:
+            cov.hit_burst(tx.nbytes)
+            cov.hit_congestion(tx.stall)
+    cov.hit("arrivals", trace.kind)
+    pools = [e.kv_pool for e in engines if e.kv_pool is not None]
+    deferrals = sum(kp.deferrals for kp in pools)
+    if deferrals:
+        cov.hit("arrivals", "deferred", deferrals)
+    if any(kp.peak_in_use == kp.n_pages for kp in pools):
+        cov.hit("arrivals", "pool_full")
+    if rejected:
+        cov.hit("arrivals", "infeasible_reject", len(rejected))
+    if slo is not None:
+        digest = slo.digest()
+    else:
+        digest = hashlib.sha256(
+            "\n".join(failures).encode()).hexdigest()
+    harvest = None
+    if failures:
+        harvest = {"seed": unit.seed, "trace": trace.label,
+                   "failures": failures[:8], "violations": violations[:8]}
+    return UnitResult(
+        uid=unit.uid, kind=unit.kind, ok=not failures, digest=digest,
+        counts=cov.to_counts(), scenarios=len(trace.arrivals),
+        failures=failures[:8], harvest=harvest)
+
+
+def _serving_target(*, devices: int, max_slots: int, max_len: int,
+                    prompt_pad: int, kv_pages, kv_page_size: int):
+    """Fresh continuous-batching serving target on the smoke model —
+    jax-lazy so non-serving workers never pay the import."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, smoke
+    from repro.models import init_params
+    from repro.models.transformer import RunFlags
+    from repro.serving import ClusterServingEngine, ServingEngine
+
+    cfg = smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+    kw = dict(max_slots=max_slots, max_len=max_len, prompt_pad=prompt_pad,
+              flags=RunFlags(attn_impl="chunked", q_chunk=16, kv_chunk=16),
+              batching="continuous", kv_pages=kv_pages,
+              kv_page_size=kv_page_size)
+    if devices > 1:
+        return ClusterServingEngine(cfg, params, n_devices=devices, **kw)
+    return ServingEngine(cfg, params, **kw)
+
+
 # ------------------------------------------------------ golden-trace regen
 def _run_golden(unit: WorkUnit) -> UnitResult:
     import importlib
@@ -184,4 +293,5 @@ EXECUTORS: Dict[str, Callable[[WorkUnit], UnitResult]] = {
     "fuzz_batch": _run_fuzz_batch,
     "sweep": _run_sweep,
     "golden": _run_golden,
+    "serving": _run_serving_campaign,
 }

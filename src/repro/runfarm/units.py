@@ -38,7 +38,7 @@ class WorkUnit:
     """One schedulable job: executed by ``runfarm.builtin.execute_unit``
     under the executor registered for ``kind``."""
     uid: str
-    kind: str                   # executor name: fuzz_batch | sweep | golden
+    kind: str              # executor: fuzz_batch | sweep | golden | serving
     seed: int
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     parent: Optional[str] = None        # uid of the mutation parent, if any
@@ -158,6 +158,36 @@ def golden_units(names: Sequence[str], gen: int = 0, start_index: int = 0
     whole-stack integrity probe."""
     return [WorkUnit(unit_uid(gen, start_index + i), "golden", 0,
                      {"name": str(n)}) for i, n in enumerate(names)]
+
+
+def serving_units(seed: int, traces: Sequence[Dict[str, Any]],
+                  pools: Sequence[Dict[str, Any]] = (
+                      {"kv_pages": 6, "kv_page_size": 8},),
+                  devices: Sequence[int] = (1,), gen: int = 0,
+                  start_index: int = 0,
+                  max_ticks: int = 50_000) -> List[WorkUnit]:
+    """Shard an open-loop serving SLO campaign: one unit per
+    (arrival-trace spec x KV-pool geometry x device count).
+
+    A trace spec is ``{"kind": "poisson"|"bursty", "params": {...}}``
+    (serving/arrivals.ARRIVAL_KINDS); the trace SEED is the unit's own
+    forked seed, so the arrival stimulus follows the uid and shards need
+    no coordination — any worker regenerates the identical trace from the
+    JSON params.  A pool spec may also override engine shape
+    (``max_slots`` / ``max_len`` / ``prompt_pad``)."""
+    units = []
+    for t in traces:
+        for pool in pools:
+            for n in devices:
+                uid = unit_uid(gen, start_index + len(units))
+                params: Dict[str, Any] = {
+                    "kind": str(t["kind"]),
+                    "trace": dict(t.get("params") or {}),
+                    "pool": dict(pool), "devices": int(n),
+                    "max_ticks": int(max_ticks)}
+                units.append(WorkUnit(uid, "serving",
+                                      fork_seed(seed, uid), params))
+    return units
 
 
 def mutate_unit(parent: WorkUnit, j: int, uid: str) -> WorkUnit:

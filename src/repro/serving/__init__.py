@@ -1,4 +1,13 @@
+from repro.serving.arrivals import (Arrival, ArrivalTrace, build_trace,
+                                    bursty_trace, poisson_trace,
+                                    replayed_trace, run_open_loop)
 from repro.serving.cluster import ClusterServingEngine
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.kvpool import KVPool
+from repro.serving.slo import RequestStats, SLOReport
 
-__all__ = ["ClusterServingEngine", "Request", "ServingEngine"]
+__all__ = [
+    "Arrival", "ArrivalTrace", "ClusterServingEngine", "KVPool", "Request",
+    "RequestStats", "SLOReport", "ServingEngine", "build_trace",
+    "bursty_trace", "poisson_trace", "replayed_trace", "run_open_loop",
+]

@@ -47,12 +47,27 @@ class ClusterServingEngine:
                  flags=None, prompt_pad: int = 16,
                  congestion: Optional[CongestionConfig] = None,
                  link_config: Optional[CongestionConfig] = None,
-                 fault_plan=None, topology=None):
+                 fault_plan=None, topology=None,
+                 batching: str = "storm",
+                 kv_pages: Optional[int] = None,
+                 kv_page_size: int = 16,
+                 kv_leak_every: int = 0,
+                 step_cycles: float = 64.0):
         if n_devices < 1:
             raise ValueError(f"need at least one device, got {n_devices}")
         self.n = n_devices
         self.max_slots = max_slots          # per device
         self.max_len = max_len
+        # scheduling mode + per-device KV paging forwarded to every
+        # device-local engine (see ServingEngine; each device owns its own
+        # page pool — admission control is local to the routed engine)
+        if batching not in ("storm", "continuous"):
+            raise ValueError(f"unknown batching mode {batching!r}")
+        self.batching = batching
+        self._serve_kw = dict(batching=batching, kv_pages=kv_pages,
+                              kv_page_size=kv_page_size,
+                              kv_leak_every=kv_leak_every,
+                              step_cycles=step_cycles)
         self.link_config = link_config if link_config is not None \
             else FABRIC_LINK
         self._fault_plan = fault_plan
@@ -78,7 +93,8 @@ class ClusterServingEngine:
                       prompt_pad=prompt_pad,
                       congestion=(dataclasses.replace(
                           congestion, seed=congestion.seed + i)
-                          if congestion is not None else None))
+                          if congestion is not None else None),
+                      **self._serve_kw)
             if flags is not None:
                 kw["flags"] = flags
             return kw
@@ -190,10 +206,17 @@ class ClusterServingEngine:
         i = self._rr % self.n
         eng = self.engines[i]
         # prompt DMA: host staging buffer -> device-local prompt_in over
-        # the shared channel (a bad request still paid for its upload)
+        # the shared channel (a bad request still paid for its upload).
+        # In continuous mode the upload issues at the cluster clock and
+        # the routed engine's clock absorbs its completion, so queueing
+        # behind a congested host channel is visible in TTFT.
         src = self.mem.buffers["prompt_in"]
-        self._dma(f"h->e{i}", "write", src.addr, src.nbytes, "prompt_in",
-                  dev=i)
+        at = max(self.time, self.clock) if self.batching == "continuous" \
+            else None
+        t_up = self._dma(f"h->e{i}", "write", src.addr, src.nbytes,
+                         "prompt_in", at=at, dev=i)
+        if self.batching == "continuous":
+            eng.advance_clock(t_up)
         np.copyto(eng.mem.buffers["prompt_in"].array, src.array)
         # forward the submission through the device-local CSR protocol;
         # remaining validation (bad length, KV budget) happens there and
@@ -231,7 +254,11 @@ class ClusterServingEngine:
         tick = self.time
         for i, eng in enumerate(self.engines):
             eng.step()
-            self._writeback(i, eng, tick)
+            # continuous mode: the retired row leaves when the engine
+            # retired it (its modeled clock), not at the cluster tick base
+            self._writeback(i, eng,
+                            eng.clock if self.batching == "continuous"
+                            else tick)
         active = self._n_active()
         self.csr.hw_set("ACTIVE", active)
         return active
@@ -256,6 +283,21 @@ class ClusterServingEngine:
 
     def _n_pending(self) -> int:
         return sum(len(e.pending) for e in self.engines)
+
+    # ------------------------------------------------------- modeled clock
+    @property
+    def clock(self) -> float:
+        """Cluster-level modeled clock: the front of all time domains
+        (host channel + every device-local engine clock).  The open-loop
+        driver (serving/arrivals.py) reads this to decide which arrivals
+        are due."""
+        return max([self.time] + [e.clock for e in self.engines])
+
+    def advance_clock(self, t: float) -> None:
+        """Fast-forward every device-local clock to ``t`` (idle-gap skip
+        by the open-loop driver; never moves time backwards)."""
+        for e in self.engines:
+            e.advance_clock(t)
 
     def run_until_done(self, max_ticks: int = 10_000) -> None:
         self.csr.hw_set("STATUS", 1)

@@ -28,6 +28,7 @@ from repro.core.registers import RO, RegisterFile
 from repro.models.transformer import (RunFlags, ShardCtx, cache_insert,
                                       init_cache, make_decode_fn,
                                       make_prefill_fn)
+from repro.serving.kvpool import KVPool
 
 CTRL, STATUS, DOORBELL = 0x00, 0x04, 0x08
 SUBMIT_ID, SUBMIT_LEN, SUBMIT_MAXNEW = 0x0C, 0x10, 0x14
@@ -41,6 +42,19 @@ class Request:
     max_new_tokens: int
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle stamps on the engine's modeled clock (continuous-batching
+    # mode; -1.0 = not reached).  serving/slo.py reads them into the SLO
+    # report: queueing = admit - arrival, TTFT = first - arrival.
+    t_submit: float = -1.0
+    t_admit: float = -1.0
+    t_first: float = -1.0
+    t_done: float = -1.0
+
+
+def _copy_request(r: "Request") -> "Request":
+    return Request(r.rid, r.prompt.copy(), r.max_new_tokens,
+                   list(r.out_tokens), r.done, r.t_submit, r.t_admit,
+                   r.t_first, r.t_done)
 
 
 class ServingEngine:
@@ -52,7 +66,12 @@ class ServingEngine:
                  congestion: Optional[CongestionConfig] = None,
                  fault_plan=None,
                  jit_fns=None,
-                 profile: bool = False):
+                 profile: bool = False,
+                 batching: str = "storm",
+                 kv_pages: Optional[int] = None,
+                 kv_page_size: int = 16,
+                 kv_leak_every: int = 0,
+                 step_cycles: float = 64.0):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -61,6 +80,23 @@ class ServingEngine:
         self.prompt_pad = prompt_pad
         self.congestion = congestion
         self.profile = profile
+        # scheduling mode: "storm" is the closed-loop legacy tick (admit
+        # ONE request or decode — the committed golden traces);
+        # "continuous" is the open-loop tick (admit as many as slots AND
+        # KV pages allow, then decode the whole batch) with a modeled
+        # clock advanced by per-step costs — serving/arrivals.py drives it
+        if batching not in ("storm", "continuous"):
+            raise ValueError(f"unknown batching mode {batching!r}")
+        self.batching = batching
+        # KV paging (serving/kvpool.py): kv_pages=None runs unpaged;
+        # kv_leak_every is the planted late-firing paging bug for the
+        # replay-bisect tier
+        self.kv_pages = kv_pages
+        self.kv_page_size = kv_page_size
+        self.kv_leak_every = kv_leak_every
+        # modeled cost of one decode step (and of one prompt bucket of
+        # prefill) on the engine clock, in cycles
+        self.step_cycles = float(step_cycles)
 
         # `jit_fns` shares one (prefill, decode) executable pair across
         # device-local engines of a ClusterServingEngine — N devices, one
@@ -78,17 +114,31 @@ class ServingEngine:
         """The shareable (prefill, decode) executable pair."""
         return (self._prefill, self._decode)
 
-    def reset(self, fault_plan=None) -> None:
-        """Restore fresh-engine state (cache, slots, queues, control plane)
-        while keeping the jitted prefill/decode executables — used by the
-        fuzz harness (core/fuzz.py) to run many randomized submit streams
-        at warm-cache cost.  ``fault_plan`` routes the engine's prompt/
-        token DMA through bridge-level fault injection."""
+    def reset(self, fault_plan=None, **overrides) -> None:
+        """Restore fresh-engine state (cache, slots, queues, control plane,
+        KV page pool, modeled clock) while keeping the jitted prefill/
+        decode executables — used by the fuzz harness (core/fuzz.py) to
+        run many randomized submit streams at warm-cache cost.
+        ``fault_plan`` routes the engine's prompt/token DMA through
+        bridge-level fault injection.  ``overrides`` reconfigures the
+        scheduling axes for the rerun: ``batching``, ``kv_pages``,
+        ``kv_page_size``, ``kv_leak_every``, ``step_cycles``."""
+        for key in ("batching", "kv_pages", "kv_page_size",
+                    "kv_leak_every", "step_cycles"):
+            if key in overrides:
+                setattr(self, key, overrides.pop(key))
+        if overrides:
+            raise TypeError(f"unknown reset overrides: {sorted(overrides)}")
         self.cache = init_cache(self.cfg, self.max_slots, self.max_len)
         self.slots: List[Optional[Request]] = [None] * self.max_slots
         self.pending: deque[Request] = deque()
         self.requests: Dict[int, Request] = {}
         self.completed = 0
+        self.clock = 0.0
+        self.kv_pool: Optional[KVPool] = (
+            KVPool(self.kv_pages, self.kv_page_size,
+                   leak_every=self.kv_leak_every)
+            if self.kv_pages is not None else None)
 
         # control plane; with `congestion` the prompt/token DMA traffic is
         # arbitrated online through the shared-link model (paper §IV-C)
@@ -116,7 +166,15 @@ class ServingEngine:
         if ln <= 0 or ln > self.max_len:
             self.csr.log.violation(f"SUBMIT_LEN out of range: {ln}")
             return
+        if self.batching == "continuous":
+            # keep the DMA time domain and the engine clock in lockstep:
+            # the prompt upload happens "now" on the modeled clock, and the
+            # clock absorbs whatever the (possibly congested/faulted) link
+            # charged for it
+            self.mem.time = max(self.mem.time, self.clock)
         prompt = self.mem.dev_read("prompt_in", engine="serve_dma")[:ln]
+        if self.batching == "continuous":
+            self.clock = max(self.clock, self.mem.time)
         self.submit(Request(rid, prompt.astype(np.int32), mx))
 
     # ---------------------------------------------------------- scheduler
@@ -146,6 +204,17 @@ class ServingEngine:
                 f"{pl} + {req.max_new_tokens} new tokens > max_len "
                 f"{self.max_len}")
             return
+        # page-pool feasibility: a request whose worst-case footprint
+        # exceeds the WHOLE pool could never be admitted — deferring it
+        # would livelock the FIFO, so it is rejected at the doorbell
+        if self.kv_pool is not None and \
+                not self.kv_pool.fits(pl + req.max_new_tokens - 1):
+            self.csr.log.violation(
+                f"request {req.rid} exceeds KV page pool: "
+                f"{self.kv_pool.pages_for(pl + req.max_new_tokens - 1)} "
+                f"pages needed > {self.kv_pool.n_pages} total")
+            return
+        req.t_submit = self.clock
         self.pending.append(req)
         self.requests[req.rid] = req
 
@@ -160,65 +229,134 @@ class ServingEngine:
         return min(self.max_len, -(-n // p) * p)
 
     def step(self) -> int:
-        """One scheduler tick: admit one pending request (prefill+insert) or
-        run one batched decode step.  Returns number of active slots."""
+        """One scheduler tick.  Storm (legacy closed-loop) mode: admit one
+        pending request (prefill+insert) OR run one batched decode step —
+        the committed golden traces.  Continuous (open-loop) mode: admit
+        as many pending requests as free slots and KV pages allow, then
+        decode the whole batch, advancing the modeled clock by per-step
+        costs.  Returns number of active slots."""
+        if self.batching == "continuous":
+            return self._step_continuous()
         slot = self._free_slot()
         if self.pending and slot is not None:
             req = self.pending.popleft()
-            # Left-pad to the prefill bucket; pad keys are masked out below.
-            # RoPE scores depend only on position deltas, so the constant
-            # offset is exact for attention families; for SSM/hybrid the
-            # leading pad tokens perturb the state unless the prompt length
-            # is already a bucket multiple (documented in the class doc).
-            pl = self._pad_len(len(req.prompt))
-            pad_n = pl - len(req.prompt)
-            toks = np.zeros((1, pl), np.int32)
-            toks[0, pad_n:] = req.prompt
-            logits, single = self._prefill(
-                self.params, self._batchify({"tokens": jnp.asarray(toks)}))
-            self.cache = cache_insert(self.cache, single, slot)
-            if pad_n and "kv_pos" in self.cache:
-                self.cache["kv_pos"] = \
-                    self.cache["kv_pos"].at[slot, :pad_n].set(-1)
-            self.slots[slot] = req
-            first = int(jnp.argmax(logits[0]))
-            req.out_tokens.append(first)
-            # the prefill itself emits one token: a max_new_tokens=1
-            # request is complete right here, not after a decode step
-            if len(req.out_tokens) >= req.max_new_tokens:
-                self._retire(slot)
+            self._prefill_admit(slot, req)
             self.csr.hw_set("ACTIVE", self._n_active())
             return self._n_active()
 
         if self._n_active():
-            toks = np.zeros((self.max_slots,), np.int32)
-            for i, s in enumerate(self.slots):
-                if s is not None:
-                    toks[i] = s.out_tokens[-1] % self.cfg.vocab_size
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              jnp.asarray(toks))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for i, s in enumerate(self.slots):
-                if s is None:
-                    continue
-                s.out_tokens.append(int(nxt[i]))
-                if len(s.out_tokens) >= s.max_new_tokens:
-                    self._retire(i)
+            self._decode_step()
             self.csr.hw_set("ACTIVE", self._n_active())
         return self._n_active()
+
+    def _prefill_admit(self, slot: int, req: Request) -> None:
+        """Prefill ``req`` into ``slot``: bucket-padded prefill, cache
+        insert, first-token emit (shared by the storm and continuous
+        schedulers; bit-exact with the legacy tick)."""
+        # Left-pad to the prefill bucket; pad keys are masked out below.
+        # RoPE scores depend only on position deltas, so the constant
+        # offset is exact for attention families; for SSM/hybrid the
+        # leading pad tokens perturb the state unless the prompt length
+        # is already a bucket multiple (documented in the class doc).
+        pl = self._pad_len(len(req.prompt))
+        pad_n = pl - len(req.prompt)
+        toks = np.zeros((1, pl), np.int32)
+        toks[0, pad_n:] = req.prompt
+        logits, single = self._prefill(
+            self.params, self._batchify({"tokens": jnp.asarray(toks)}))
+        self.cache = cache_insert(self.cache, single, slot)
+        if pad_n and "kv_pos" in self.cache:
+            self.cache["kv_pos"] = \
+                self.cache["kv_pos"].at[slot, :pad_n].set(-1)
+        self.slots[slot] = req
+        first = int(jnp.argmax(logits[0]))
+        req.out_tokens.append(first)
+        # the prefill itself emits one token: a max_new_tokens=1
+        # request is complete right here, not after a decode step
+        if len(req.out_tokens) >= req.max_new_tokens:
+            self._retire(slot)
+
+    def _decode_step(self) -> None:
+        """One batched decode step over all occupied slots (shared by the
+        storm and continuous schedulers; bit-exact with the legacy tick)."""
+        toks = np.zeros((self.max_slots,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                toks[i] = s.out_tokens[-1] % self.cfg.vocab_size
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            s.out_tokens.append(int(nxt[i]))
+            if len(s.out_tokens) >= s.max_new_tokens:
+                self._retire(i)
+
+    def _step_continuous(self) -> int:
+        """Continuous-batching tick: FIFO admission (no head-of-line
+        bypass — the admitted set stays a pure function of arrival order
+        and pool geometry) up to slot/page limits, then one batched decode
+        over everything resident.  The modeled clock pays
+        ``step_cycles`` per prompt bucket of prefill and per decode step."""
+        admitted = 0
+        while self.pending:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            req = self.pending[0]
+            pl = self._pad_len(len(req.prompt))
+            if self.kv_pool is not None and not self.kv_pool.reserve(
+                    req.rid, pl + req.max_new_tokens - 1):
+                break       # FIFO: deferred head blocks the queue
+            self.pending.popleft()
+            req.t_admit = self.clock
+            self.clock += self.step_cycles * max(1, pl // self.prompt_pad)
+            req.t_first = self.clock
+            self._prefill_admit(slot, req)
+            admitted += 1
+        if self._n_active():
+            self.clock += self.step_cycles
+            self._decode_step()
+        elif not admitted and self.pending:
+            # nothing runnable (pages short of the FIFO head — only
+            # reachable under an injected leak): modeled time must still
+            # progress so the open-loop driver's max_ticks bound fires
+            # instead of freezing the clock
+            self.clock += self.step_cycles
+        self.csr.hw_set("ACTIVE", self._n_active())
+        return self._n_active()
+
+    def advance_clock(self, t: float) -> None:
+        """Fast-forward the modeled clock to ``t`` (idle-gap skip by the
+        open-loop driver; never moves time backwards)."""
+        self.clock = max(self.clock, float(t))
 
     def _retire(self, i: int) -> None:
         """Complete slot i: tokens_out DMA writeback, slot free,
         COMPLETED CSR update (shared by the prefill and decode paths)."""
         s = self.slots[i]
         s.done = True
+        s.t_done = self.clock
+        if self.kv_pool is not None:
+            self.kv_pool.release(s.rid)
         # row-sized DMA writeback: only slot i's tokens move
         buf = self.mem.buffers["tokens_out"]
         buf.array[i, :len(s.out_tokens)] = s.out_tokens
         row = buf.array[i]
-        self.mem.log_burst_list(
-            [("serve_dma", "write",
-              buf.addr + i * row.nbytes, row.nbytes)])
+        if self.batching == "continuous":
+            # writeback is issued at the engine clock; the clock then
+            # absorbs the link's makespan (congestion/faults show up as
+            # inter-token latency, not just log entries)
+            self.mem.log_burst_list(
+                [("serve_dma", "write",
+                  buf.addr + i * row.nbytes, row.nbytes)],
+                base_time=max(self.mem.time, self.clock))
+            self.clock = max(self.clock, self.mem.time)
+        else:
+            self.mem.log_burst_list(
+                [("serve_dma", "write",
+                  buf.addr + i * row.nbytes, row.nbytes)])
         self.slots[i] = None
         self.completed += 1
         self.csr.hw_set("COMPLETED", self.completed)
@@ -255,29 +393,33 @@ class ServingEngine:
 
         Requests are copied by rid so the slots/pending/requests aliasing
         (one object, three views) survives the round-trip."""
-        reqs = {rid: Request(r.rid, r.prompt.copy(), r.max_new_tokens,
-                             list(r.out_tokens), r.done)
-                for rid, r in self.requests.items()}
+        reqs = {rid: _copy_request(r) for rid, r in self.requests.items()}
         return {
             "cache": dict(self.cache),      # jax arrays are immutable
             "requests": reqs,
             "slots": [s.rid if s is not None else None for s in self.slots],
             "pending": [r.rid for r in self.pending],
             "completed": self.completed,
+            "clock": self.clock,
+            "kv_pool": (self.kv_pool.get_state()
+                        if self.kv_pool is not None else None),
             "mem": self.mem.get_state(),    # includes the shared log
             "csr": self.csr.get_state(),
         }
 
     def set_state(self, state: dict) -> None:
         self.cache = dict(state["cache"])
-        self.requests = {rid: Request(r.rid, r.prompt.copy(),
-                                      r.max_new_tokens, list(r.out_tokens),
-                                      r.done)
+        self.requests = {rid: _copy_request(r)
                          for rid, r in state["requests"].items()}
         self.slots = [self.requests[rid] if rid is not None else None
                       for rid in state["slots"]]
         self.pending = deque(self.requests[rid] for rid in state["pending"])
         self.completed = state["completed"]
+        # pre-paging checkpoints (storm-mode recordings) carry neither key
+        self.clock = state.get("clock", 0.0)
+        pool_state = state.get("kv_pool")
+        if pool_state is not None and self.kv_pool is not None:
+            self.kv_pool.set_state(pool_state)
         self.mem.set_state(state["mem"])
         self.csr.set_state(state["csr"])
 

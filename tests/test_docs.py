@@ -100,6 +100,23 @@ def test_performance_docs_transcript():
     assert buf.getvalue().splitlines() == expected
 
 
+def test_serving_docs_transcript():
+    """The open-loop serving walkthrough transcript in docs/serving.md
+    is the verbatim output of examples/open_loop_serving.py (which
+    itself asserts rerun digest identity before returning 0)."""
+    expected = _fenced_transcript(
+        DOCS / "serving.md",
+        "prints (deterministic — modeled cycles only, no wall time):")
+    spec = importlib.util.spec_from_file_location(
+        "open_loop_serving", ROOT / "examples" / "open_loop_serving.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        assert mod.main([]) == 0
+    assert buf.getvalue().splitlines() == expected
+
+
 def test_index_links_every_page():
     index = (DOCS / "index.md").read_text()
     pages = sorted(p.name for p in DOCS.glob("*.md") if p.name != "index.md")

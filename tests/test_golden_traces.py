@@ -1,9 +1,11 @@
 """Golden-trace regression tests: canonical TransactionLog renderings for
-six fixed-seed runs — a single-device launch, a 4-device fabric
+seven fixed-seed runs — a single-device launch, a 4-device fabric
 all_reduce, a 3-device batched-leg fabric launch, an 8-device 2D-torus
 ROUTED run (multi-hop journeys + hierarchical all_reduce), a
-fault-plan-active fuzz scenario, and a cluster-serving storm — diffed
-line-by-line against committed traces (tests/golden/).
+fault-plan-active fuzz scenario, a cluster-serving storm, and an
+open-loop continuous-batching serving run on a 4-device ring-routed
+cluster under KV-pool admission control — diffed line-by-line against
+committed traces (tests/golden/).
 
 Every golden run is built through a ``DebugSession`` recording
 (core/replay.py), so a mismatch is explained with TIME TRAVEL instead of
@@ -48,6 +50,7 @@ FABRIC_LINK = CongestionConfig(link_bytes_per_cycle=64.0, base_latency=100.0,
                                max_burst_bytes=4096, dos_prob=0.05, seed=11)
 FUZZ_SEED = 5                   # faulty-fuzz trace: ProtocolFuzzer seed
 STORM_SEED = 0                  # cluster storm prompt seed
+OPEN_LOOP_SEED = 23             # open-loop serving arrival + fault seed
 
 
 @dataclasses.dataclass
@@ -271,6 +274,57 @@ def cluster_serving_storm_run() -> GoldenRun:
         [f"# engine {i} log" for i in range(clu.n)])
 
 
+@functools.lru_cache(maxsize=1)
+def _open_loop_cluster():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, smoke
+    from repro.models import init_params
+    from repro.models.transformer import RunFlags
+    from repro.serving.cluster import ClusterServingEngine
+    cfg = smoke(get_config("llama3.2-1b"))
+    params = init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16)
+    return ClusterServingEngine(
+        cfg, params, n_devices=4, max_slots=2, max_len=32, prompt_pad=8,
+        flags=RunFlags(attn_impl="chunked", q_chunk=16, kv_chunk=16),
+        topology="ring", batching="continuous",
+        kv_pages=3, kv_page_size=8)
+
+
+def _open_loop_trace():
+    # a burst of up to 8 lands ~2 requests per device, and every request
+    # reserves >= 2 of its engine's 3 pages — the second concurrent
+    # request per engine must defer, so queueing delay enters the trace
+    from repro.serving.arrivals import bursty_trace
+    return bursty_trace(OPEN_LOOP_SEED, n_requests=10, burst_size=8,
+                        gap_in_burst=10.0, gap_between=900.0,
+                        prompt_lens=(3, 10), max_new=(1, 4))
+
+
+def cluster_open_loop_serving_run() -> GoldenRun:
+    """Fixed open-loop serving run: a seeded bursty arrival trace driven
+    through continuous batching on a 4-device ring-ROUTED cluster with
+    per-device KV page pools (4 pages x 8 entries — a burst oversubscribes
+    a pool, so deferred admission shapes the trace) and an active fault
+    plan perturbing the host-channel DMA.  Pins the whole tentpole path:
+    arrival-driven CSR submissions, admission control, modeled-clock
+    prefill/decode cadence, and routed prompt/token DMA."""
+    from repro.core.fuzz import FaultPlan
+    clu = _open_loop_cluster()
+
+    def factory():
+        clu.reset(FaultPlan(seed=OPEN_LOOP_SEED))
+        return clu
+
+    sess = rp.DebugSession(factory, checkpoint_interval=0,
+                           label="cluster_open_loop_serving")
+    rec = rp.record_open_loop(sess, _open_loop_trace())
+    return GoldenRun.render(
+        sess, rec, ["# cluster front log"] +
+        [f"# engine {i} log" for i in range(clu.n)])
+
+
 TRACES = {
     "single_device_launch": single_device_run,
     "fabric_all_reduce": fabric_all_reduce_run,
@@ -278,8 +332,10 @@ TRACES = {
     "fabric_torus_all_reduce": fabric_torus_all_reduce_run,
     "faulty_fuzz": faulty_fuzz_run,
     "cluster_serving_storm": cluster_serving_storm_run,
+    "cluster_open_loop_serving": cluster_open_loop_serving_run,
 }
-SLOW = {"cluster_serving_storm"}         # jits the smoke model
+# jit the smoke model
+SLOW = {"cluster_serving_storm", "cluster_open_loop_serving"}
 
 
 def _mark(name):

@@ -63,8 +63,16 @@ def test_stall_attribution_closes_on_golden_runs(name):
     target = run.recording.target
     if isinstance(target, FireBridge):
         assert prof.channel("ddr").horizon == target.mem.time
-    errs = validate_trace(prof.to_perfetto())
+    trace = prof.to_perfetto()
+    errs = validate_trace(trace)
     assert errs == [], errs
+    if name == "cluster_open_loop_serving":
+        # the continuous-batching golden run must surface per-request
+        # lifecycle tracks (queue/prefill/decode) in the export
+        assert len(prof.requests) == 10
+        assert len(prof.request_rows()) == 11
+        cats = {e.get("cat") for e in trace["traceEvents"]}
+        assert {"queue", "prefill", "decode"} <= cats
 
 
 # ------------------------------------------------------------- determinism

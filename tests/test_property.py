@@ -418,3 +418,34 @@ ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
     assert abs(p.collective_bytes - expect) < 1e-6
     assert {c.kind for c in p.collectives} == {
         "all-reduce", "all-gather", "collective-permute"}
+
+
+# ------------------------------------------- open-loop serving admission
+@st.composite
+def arrival_plans(draw):
+    """Arbitrary open-loop arrival traces x KV page-pool geometries."""
+    page_size = draw(st.sampled_from([4, 8]))
+    n_pages = draw(st.integers(2, 5))
+    entries = []
+    t = 0
+    for rid in range(draw(st.integers(1, 5))):
+        t += draw(st.integers(0, 400))
+        pl = draw(st.integers(1, 10))
+        mx = draw(st.integers(1, 5))
+        entries.append((rid, float(t), tuple(range(1, pl + 1)), mx))
+    return entries, n_pages, page_size
+
+
+@given(arrival_plans())
+@settings(max_examples=15, deadline=None)
+def test_open_loop_admission_invariants(plan):
+    """Arbitrary arrival trace x pool geometry: every pool-feasible
+    request retires with exactly its token budget and monotone lifecycle
+    stamps, every infeasible request is rejected loudly at the doorbell
+    (never silently starved), and the pool drains back to fully free —
+    no page leaks, no stranded requests, under ANY stimulus.  The
+    deterministic fallback for environments without hypothesis is
+    tests/test_serving_slo.py::test_admission_invariants_randomized."""
+    import test_serving_slo as slo
+    entries, n_pages, page_size = plan
+    slo.check_admission_invariants(entries, n_pages, page_size)

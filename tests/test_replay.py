@@ -416,6 +416,58 @@ def test_cluster_storm_record_replay_digest_identity():
         math.log2(max(2, rec.n_ops))) + 2
 
 
+@pytest.mark.slow
+def test_open_loop_serving_checkpoint_restore_mid_decode():
+    """Open-loop serving: restoring a MID-DECODE checkpoint (requests in
+    flight, KV pages held, partial token streams) and replaying the
+    remaining window regenerates the uninterrupted run bit-identically —
+    tokens, transaction lines, and the final state fingerprint.  The
+    engine's get_state/set_state must therefore round-trip the modeled
+    clock, the KV page pool, and every in-flight request."""
+    import test_serving_slo as slo
+    trace = slo._trace(seed=9, n=6)
+    eng = slo._engine()
+
+    def factory():
+        eng.reset(batching="continuous", kv_pages=4, kv_page_size=8,
+                  kv_leak_every=0)
+        return eng
+
+    sess = rp.DebugSession(factory, checkpoint_interval=6, label="openloop")
+    rec = rp.record_open_loop(sess, trace)
+    tokens = {rid: list(r.out_tokens)
+              for rid, r in rec.target.requests.items()}
+    assert len(tokens) == len(trace.arrivals)
+
+    # find a checkpoint that lands mid-decode: restored state has active
+    # requests and at least one partially generated stream
+    mid = None
+    for ck in rec.checkpoints:
+        if not 0 < ck.op_index < rec.n_ops:
+            continue
+        w = sess.replay(rec, ck.op_index, ck.op_index)
+        reqs = w.target.requests
+        partial = [r for r in reqs.values()
+                   if 0 < len(r.out_tokens) < r.max_new_tokens
+                   and not r.done]
+        if w.target._n_active() and partial:
+            mid = ck
+            assert w.target.kv_pool.in_use > 0   # pages held mid-flight
+            break
+    assert mid is not None, "no checkpoint landed mid-decode"
+
+    w = sess.replay(rec, mid.op_index, rec.n_ops)
+    assert w.lines == rec.window_lines(mid.op_index, rec.n_ops)
+    assert w.digest() == rec.window_digest(mid.op_index, rec.n_ops)
+    assert rp.state_fingerprint(w.target.get_state()) == \
+        rec.final_fingerprint
+    got = {rid: list(r.out_tokens) for rid, r in w.target.requests.items()}
+    assert got == tokens
+    for r in w.target.requests.values():
+        assert r.done and len(r.out_tokens) == r.max_new_tokens
+    assert w.target.kv_pool.n_free == w.target.kv_pool.n_pages
+
+
 # -------------------------------------------------------------- benchmark
 @pytest.mark.slow
 def test_bench_replay_quick_mode():

@@ -14,8 +14,8 @@ import pytest
 from repro.core.fuzz import FaultPlan
 from repro.runfarm import (CampaignInterrupted, CampaignManager,
                            ResultStore, execute_unit, fork_seed,
-                           fuzz_units, golden_units, sweep_units,
-                           unit_uid)
+                           fuzz_units, golden_units, serving_units,
+                           sweep_units, unit_uid)
 
 
 def _campaign(tmp, name, workers, **kw):
@@ -164,6 +164,31 @@ def test_sweep_and_golden_units_run_in_farm(tmp_path):
     gu = golden_units(["single_device_launch", "faulty_fuzz"])
     rg = CampaignManager(tmp_path / "g", gu).run()
     assert rg.passed, [rg.records[u]["failures"] for u in rg.uids]
+
+
+def test_serving_units_run_in_farm(tmp_path):
+    """Open-loop serving units (tentpole lane): the farm shards (trace x
+    pool x devices) cells, each unit's SLO digest is a pure function of
+    its uid, admission invariants hold worker-side, and a tight pool
+    surfaces deferred-admission coverage."""
+    su = serving_units(
+        seed=9,
+        traces=[{"kind": "bursty",
+                 "params": {"n_requests": 8, "burst_size": 4,
+                            "gap_between": 400.0}}],
+        pools=[{"kv_pages": 3, "kv_page_size": 8}],
+        devices=(1, 2))
+    assert [u.kind for u in su] == ["serving", "serving"]
+    assert su[0].payload_hash() != su[1].payload_hash()
+    ra = CampaignManager(tmp_path / "v1", su, seed=9).run()
+    rb = CampaignManager(tmp_path / "v2", su, seed=9).run()
+    assert ra.passed, [ra.records[u]["failures"] for u in ra.uids]
+    assert ra.digest == rb.digest
+    assert ra.coverage.counts == rb.coverage.counts
+    # the 3-page pool oversubscribes a 4-burst: admission control must
+    # have deferred at least once, and the arrivals group saw the shape
+    assert ra.coverage.counts["arrivals"]["bursty"] >= 2
+    assert ra.coverage.counts["arrivals"]["deferred"] >= 1
 
 
 # -------------------------------------------- cross-process determinism
