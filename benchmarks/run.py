@@ -31,10 +31,11 @@ def _run(name: str, fn) -> list[str]:
 
 def main() -> None:
     from benchmarks import (bench_access_patterns, bench_bandwidth_profile,
-                            bench_debug_iteration, bench_fabric_scaling,
-                            bench_fuzz, bench_hls4ml_scaling,
-                            bench_profiler, bench_replay, bench_runfarm,
-                            bench_serving, bench_simspeed)
+                            bench_counters, bench_debug_iteration,
+                            bench_fabric_scaling, bench_fuzz,
+                            bench_hls4ml_scaling, bench_profiler,
+                            bench_replay, bench_runfarm, bench_serving,
+                            bench_simspeed)
     from benchmarks import roofline as roofline_mod
 
     print("name,us_per_call,derived")
@@ -47,6 +48,7 @@ def main() -> None:
     _run("fabric_scaling", bench_fabric_scaling.run)  # quick mode
     _run("replay_debug_iteration", bench_replay.run)  # quick mode
     _run("profiler_overhead", bench_profiler.run)   # quick mode
+    _run("counters_overhead", bench_counters.run)   # quick mode
     _run("simspeed", bench_simspeed.run)            # quick mode
     _run("runfarm_scaling", bench_runfarm.run)      # quick mode
     _run("serving_slo", bench_serving.run)          # quick mode

@@ -28,8 +28,10 @@ from repro.core.congestion import CongestionConfig
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--trace-out", default="profile_cnn.trace.json",
-                    help="where to write the Perfetto/Chrome-trace JSON")
+    ap.add_argument("--trace-out",
+                    default="artifacts/profile_cnn.trace.json",
+                    help="where to write the Perfetto/Chrome-trace JSON "
+                         "(artifacts/ is gitignored)")
     args = ap.parse_args(argv)
 
     specs = small_cnn_specs(16)

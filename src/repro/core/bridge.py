@@ -33,6 +33,8 @@ import numpy as np
 
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
+from repro.core.counters import (CounterBank, CounterSpec,
+                                 register_link_counters)
 from repro.core.registers import RegisterFile
 from repro.core.transactions import (BurstBatch, OpMark, Transaction,
                                      TransactionLog, record_mark)
@@ -83,6 +85,23 @@ class MemoryBridge:
         # from get_state/set_state.
         self.profile = profile
         self.marks: List[OpMark] = []
+        # always-on sampled counters (core/counters.py, ROADMAP 5).
+        # Probes only read state the bridge/link already maintain, so
+        # timing and the transaction log are bit-identical with the bank
+        # present — the golden traces are the witness.
+        self.counters = CounterBank("ddr")
+        self.counters.register(CounterSpec("transactions", "events"),
+                               lambda: self.log.n_txs)
+        if self.link is not None:
+            register_link_counters(self.counters, self.link)
+        else:
+            self.counters.register(CounterSpec("bytes_moved", "bytes"))
+            self.counters.register(CounterSpec("cycles", "cycles"),
+                                   lambda: self.time)
+        self.counters.register(CounterSpec("violations", "events"),
+                               lambda: len(self.log.violations))
+        self.counters.register(CounterSpec("faults", "events"),
+                               lambda: len(self.log.faults))
 
     def mark(self, op: str, engine: str = "", meta: str = ""):
         """Attribute every transaction logged inside the block to one
@@ -137,8 +156,9 @@ class MemoryBridge:
             batch = self.fault_plan.perturb_batch(batch, self.log)
         if self.link is not None:
             self.time = self.link.submit_batch(batch, self.log)
-            return
-        self.time = self._fast_clock(batch, self.time)
+        else:
+            self.time = self._fast_clock(batch, self.time)
+        self.counters.tick(self.time)
 
     def _fast_clock(self, batch: BurstBatch, t: float) -> float:
         """Congestion-free logical clock over a batch: one cycle per
@@ -153,6 +173,7 @@ class MemoryBridge:
         if times:
             batch.rec["time"] = out
             self.log.log_batch(batch)
+            self.counters.inc("bytes_moved", int(batch.rec["nbytes"].sum()))
         return t
 
     def dev_read(self, name: str, engine: str = "dma") -> np.ndarray:
@@ -200,8 +221,9 @@ class MemoryBridge:
             batch = self.fault_plan.perturb_batch(batch, self.log)
         if self.link is not None:
             self.time = self.link.submit_batch(batch, self.log)
-            return
-        self.time = self._fast_clock(batch, t)
+        else:
+            self.time = self._fast_clock(batch, t)
+        self.counters.tick(self.time)
 
     def congestion_stats(self) -> Optional[CongestionResult]:
         """Fig. 8 statistics accumulated by the online link so far
@@ -224,6 +246,7 @@ class MemoryBridge:
             "link": self.link.get_state() if self.link is not None else None,
             "fault_plan": (self.fault_plan.get_state()
                            if self.fault_plan is not None else None),
+            "counters": self.counters.get_state(),
         }
 
     def set_state(self, state: Dict[str, Any]) -> None:
@@ -236,6 +259,9 @@ class MemoryBridge:
             self.link.set_state(state["link"])
         if state["fault_plan"] is not None:
             self.fault_plan.set_state(state["fault_plan"])
+        cs = state.get("counters")
+        if cs is not None:
+            self.counters.set_state(cs)
 
 
 class FireBridge:
@@ -314,6 +340,11 @@ class FireBridge:
     def congestion_stats(self) -> Optional[CongestionResult]:
         """Per-engine stall/busy/utilization accumulated online (Fig. 8)."""
         return self.mem.congestion_stats()
+
+    def counter_banks(self) -> List[CounterBank]:
+        """Always-on counter banks owned by this target, in stable order
+        (core/counters.py counter-diff oracle)."""
+        return [self.mem.counters]
 
     def profiler(self, label: Optional[str] = None):
         """Off-chip data-movement profile of everything logged so far

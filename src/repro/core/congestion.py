@@ -141,6 +141,10 @@ class LinkModel:
         self._busy: Dict[str, float] = defaultdict(float)
         self._stall: Dict[str, float] = defaultdict(float)
         self._total_bytes = 0
+        # running DoS total, folded per grant in grant order — the same
+        # float sequence the profiler folds per channel, so the counter
+        # layer's dos_cycles is bit-exact against stall attribution
+        self._dos_total = 0.0
         self._rr = 0
         self._timeline: List[Transaction] = []
         self._tl_pending: List[BurstBatch] = []
@@ -198,6 +202,7 @@ class LinkModel:
             self._ready[e] = tx.complete + cfg.per_engine_issue_gap
             self._busy[e] += xfer
             self._stall[e] += tx.stall
+            self._dos_total += dos
             self._total_bytes += tx.nbytes
             self.timeline.append(tx)
             last = tx.complete
@@ -315,6 +320,7 @@ class LinkModel:
         link_free = self._link_free
         gap = cfg.per_engine_issue_gap
         ready, busy, stall_acc = self._ready, self._busy, self._stall
+        dos_total = self._dos_total
         total = 0
         for i, tx in enumerate(granted):
             e = tx.engine
@@ -333,8 +339,10 @@ class LinkModel:
             ready[e] = comp + gap
             busy[e] += x
             stall_acc[e] += st
+            dos_total += d
             total += tx.nbytes
         self._link_free = link_free
+        self._dos_total = dos_total
         self._total_bytes += total
         self.timeline.extend(granted)
         if log is not None:
@@ -404,6 +412,7 @@ class LinkModel:
                 busy[e] += x
                 stall_acc[e] += st
         else:
+            dos_total = self._dos_total
             for i in range(n):
                 e = eng[i]
                 r = ready[e]
@@ -420,6 +429,10 @@ class LinkModel:
                 ready[e] = comp + gap
                 busy[e] += x
                 stall_acc[e] += st
+                dos_total += d
+            # the no-DoS branch skips the fold: x + 0.0 == x bitwise, so
+            # the accumulated value is identical to the scalar reference
+            self._dos_total = dos_total
             rec["dos"] = dos_l
         rec["stall"] = stall_l
         rec["complete"] = comp_l
@@ -432,6 +445,31 @@ class LinkModel:
         if log is not None:
             log.log_batch(batch)
         return link_free
+
+    # ------------------------------------------------------ counter probes
+    # Read-only accessors for the always-on counter layer
+    # (core/counters.py).  The per-engine folds are summed in sorted-
+    # engine order so the probe is deterministic and, each term being a
+    # non-decreasing non-negative fold, monotone across samples.
+    def counter_bytes(self) -> int:
+        return self._total_bytes
+
+    def counter_busy(self) -> float:
+        busy = self._busy
+        t = 0.0
+        for e in sorted(busy):
+            t += busy[e]
+        return t
+
+    def counter_stall(self) -> float:
+        stall = self._stall
+        t = 0.0
+        for e in sorted(stall):
+            t += stall[e]
+        return t
+
+    def counter_dos(self) -> float:
+        return self._dos_total
 
     # --------------------------------------------- checkpoint/restore hooks
     def get_state(self) -> dict:
@@ -450,6 +488,7 @@ class LinkModel:
             "busy": dict(self._busy),
             "stall": dict(self._stall),
             "total_bytes": self._total_bytes,
+            "dos_total": self._dos_total,
             "rr": self._rr,
             "timeline": list(self.timeline),
         }
@@ -461,6 +500,7 @@ class LinkModel:
         self._busy = defaultdict(float, state["busy"])
         self._stall = defaultdict(float, state["stall"])
         self._total_bytes = state["total_bytes"]
+        self._dos_total = state.get("dos_total", 0.0)
         self._rr = state["rr"]
         # restored entries are aliased, not re-copied: transactions are
         # immutable once arbitrated (mutation happens pre-submit), and the

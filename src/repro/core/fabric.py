@@ -55,6 +55,9 @@ import numpy as np
 from repro.core.bridge import FireBridge, MemoryBridge
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
+from repro.core.counters import (CounterBank, CounterSpec,
+                                 register_link_counters,
+                                 register_switch_port_counters)
 from repro.core.switch import SwitchFabric
 from repro.core.topology import Topology, build_topology
 from repro.core.transactions import (BurstBatch, OpMark, Transaction,
@@ -160,6 +163,28 @@ class FabricCluster:
         # crossing the fabric is not)
         self.host = MemoryBridge(self.log)
         self.time = 0.0
+        # always-on sampled counters (core/counters.py): one bank per
+        # fabric channel — the shared host link, every device port, and
+        # (routed) every switch port with its credit flow-control
+        # counters.  Probes only read arbiter state; ticks happen after
+        # an issue completes, so timing/logs are unaffected.
+        self._counter_banks: List[CounterBank] = []
+        hb = CounterBank("fabric/host")
+        register_link_counters(hb, self.host_link)
+        hb.register(CounterSpec("transactions", "events"),
+                    lambda: self.log.n_txs)
+        hb.register(CounterSpec("faults", "events"),
+                    lambda: len(self.log.faults))
+        self._counter_banks.append(hb)
+        for i, port in enumerate(self.ports):
+            pb = CounterBank(f"fabric/port{i}")
+            register_link_counters(pb, port)
+            self._counter_banks.append(pb)
+        if self.switch is not None:
+            for sp in self.switch.ports:
+                sb = CounterBank(f"fabric/sw:{sp.label}")
+                register_switch_port_counters(sb, sp)
+                self._counter_banks.append(sb)
 
     # ------------------------------------------------------------- devices
     def register_op(self, op: str, **table) -> None:
@@ -240,6 +265,7 @@ class FabricCluster:
                                   batch.rec["stall"].tolist()):
                     self.coverage.hit_burst(nb)
                     self.coverage.hit_congestion(st)
+        self._tick_counters(done)
         return done
 
     # ------------------------------------------------------ routed journeys
@@ -310,11 +336,24 @@ class FabricCluster:
                                       batch.rec["stall"].tolist()):
                         cov.hit_burst(nb)
                         cov.hit_congestion(st)
+        self._tick_counters(done)
         return done
 
     def _cover(self, op: str) -> None:
         if self.coverage is not None:
             self.coverage.hit("fabric", op)
+
+    def _tick_counters(self, now: float) -> None:
+        """Sample every fabric bank up to ``now`` — called after each
+        issue wave, i.e. at the points the fabric clock advances."""
+        for b in self._counter_banks:
+            b.tick(now)
+
+    def counter_banks(self) -> List[CounterBank]:
+        """All cluster banks in stable order (fabric channels first, then
+        each device's DDR bank) — the counter-diff oracle's unit."""
+        return (list(self._counter_banks)
+                + [d.mem.counters for d in self.devices])
 
     def _mark(self, op: str, meta: str = ""):
         """Attribute the fabric transactions logged inside the block to
@@ -625,6 +664,7 @@ class FabricCluster:
             "time": self.time,
             "fault_plan": (self.fault_plan.get_state()
                            if self.fault_plan is not None else None),
+            "counters": [b.get_state() for b in self._counter_banks],
         }
 
     def set_state(self, state: Dict[str, Any]) -> None:
@@ -639,6 +679,8 @@ class FabricCluster:
         self.time = state["time"]
         if state["fault_plan"] is not None:
             self.fault_plan.set_state(state["fault_plan"])
+        for b, s in zip(self._counter_banks, state.get("counters") or []):
+            b.set_state(s)
 
     # --------------------------------------------------------- diagnostics
     def link_stats(self) -> Dict[str, CongestionResult]:

@@ -133,6 +133,11 @@ class EngineStats:
     contention: float = 0.0     # wait-for-link cycles (stall minus DoS)
     dos: float = 0.0
     fault_delay: float = 0.0
+    # fold of tx.stall in grant order — BIT-exactly the arbiter's own
+    # per-engine stall accumulator (``CongestionResult.per_engine_stall``
+    # and the ``stall_cycles`` counter probe fold the same terms in the
+    # same order), where ``contention + dos`` re-associates the sum
+    grant_stall: float = 0.0
 
     @property
     def stall(self) -> float:
@@ -249,6 +254,7 @@ def _profile_link(name: str, link: LinkModel) -> ChannelProfile:
         e.contention += wait
         e.dos += tx.dos
         e.fault_delay += tx.fault_delay
+        e.grant_stall += tx.stall
         xfer_sum += xfer
     contended = _overlap(busy, _merged(waits))
     total = link.now
@@ -376,6 +382,15 @@ class DataMovementProfiler:
         # does not pin its bridge's DDR buffers for the report's lifetime
         self._resolve(target)
         self._by_name = {c.name: c for c in self.channels}
+        # sampled counter streams (core/counters.py), snapshotted as
+        # plain tuples — bank probes close over the target, so retaining
+        # the banks themselves would break the no-pin discipline above
+        from repro.core.counters import counter_banks as _banks_of
+        self.counter_tracks: List[Tuple[str, List[Tuple[str, str]],
+                                        List[float], List[tuple]]] = [
+            (b.name, [(s.name, s.unit) for s in b.specs],
+             list(b.stream.times), list(b.stream.rows))
+            for b in _banks_of(target)]
 
     # ---------------------------------------------------------- resolution
     def _resolve(self, target: Any) -> None:
@@ -672,6 +687,23 @@ class DataMovementProfiler:
                            "pid": pid, "tid": tid,
                            "args": {"rid": s["rid"],
                                     "tokens": s["tokens"]}})
+        if any(times for _, _, times, _ in self.counter_tracks):
+            # sampled performance-counter tracks (core/counters.py): one
+            # process per bank, one "C" series per counter
+            pid = (len(self.channels) + 1 + (1 if self.marks else 0)
+                   + (1 if self.requests else 0))
+            for bank, cols, times, rows in self.counter_tracks:
+                if not times:
+                    continue
+                ev.append({"ph": "M", "name": "process_name", "pid": pid,
+                           "args": {"name":
+                                    f"{self.label}/counters/{bank}"}})
+                for t, row in zip(times, rows):
+                    for (cname, unit), v in zip(cols, row):
+                        ev.append({"ph": "C", "name": cname, "pid": pid,
+                                   "ts": round(t, 6),
+                                   "args": {unit: round(float(v), 6)}})
+                pid += 1
         return {
             "traceEvents": ev,
             "displayTimeUnit": "ms",

@@ -270,7 +270,10 @@ def _hash_update(h: "hashlib._Hash", v: Any) -> None:
 
 
 # state-dict keys that are trace/history, never replay-relevant identity
-_TRACE_KEYS = frozenset({"log", "timeline"})
+# ("counters" is the sampled CounterBank stream — derived observation of
+# the other state, bit-identically regenerated by replay, so including it
+# would only double-count what the log/timing keys already witness)
+_TRACE_KEYS = frozenset({"log", "timeline", "counters"})
 # additionally excluded from the FUNCTIONAL fingerprint: anything timing-
 # or stimulus-stream-shaped, so runs that legitimately differ in timing
 # (per-backend fault forks, perturbed congestion) only diverge

@@ -177,6 +177,13 @@ class CellResult:
     # serving run: p50/p99 TTFT + inter-token latency in modeled cycles,
     # surfaced as extra to_rows columns
     slo: Optional[Any] = None
+    # sampled performance-counter identity (core/counters.py): dict with
+    # ``digest`` (full stream, comparable among cells sharing
+    # ``timing_key``), ``functional`` (scale/backend-invariant digest of
+    # functional-scope totals), ``totals`` (name -> cumulative value,
+    # summed over banks), and ``timing_key`` — the counter-diff oracle's
+    # raw material (None when the cell errored)
+    counters: Optional[Dict[str, Any]] = None
 
     @property
     def link_stall(self) -> float:
@@ -220,11 +227,19 @@ class SweepReport:
     # merged functional coverage across all cells (deterministic cell-order
     # merge of the per-cell private models) when the session has a sink
     coverage: Optional[CoverageModel] = None
+    # counter-diff oracle verdicts (core/counters.py): group label ->
+    # {pair, kind, totals} for every group whose sampled counter streams
+    # (same timing key) or functional totals (any scale) disagree — the
+    # cheap pre-check that fires before the full output diff and
+    # escalates into the replay-bisection lane
+    counter_mismatches: Dict[str, Any] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def passed(self) -> bool:
         return (all(r.error is None and not r.violations for r in self.cells)
-                and all(e.passed for e in self.equivalence.values()))
+                and all(e.passed for e in self.equivalence.values())
+                and not self.counter_mismatches)
 
     def summary(self) -> dict:
         return {
@@ -240,6 +255,9 @@ class SweepReport:
                                 f"{d.n_replays} replays)"
                                 if hasattr(d, "op_index") else str(d))
                             for g, d in self.divergences.items()},
+            "counter_mismatches": {
+                g: f"{m['kind']} mismatch: {m['pair'][0]} vs {m['pair'][1]}"
+                for g, m in self.counter_mismatches.items()},
         }
 
     def to_rows(self, wall: bool = True) -> List[str]:
@@ -473,7 +491,33 @@ class CoVerifySession:
             faults=list(plan.events) if plan is not None else [],
             profile=fb.profiler(cell.label) if self.profile else None,
             coverage=cov,
+            counters=(self._cell_counters(
+                fb, cell, cell.label if plan is not None else None)
+                if err is None else None),
         )
+
+    @staticmethod
+    def _cell_counters(target: Any, cell: SweepCell,
+                       fork_label: Optional[str]) -> Dict[str, Any]:
+        """Counter-diff oracle payload of one finished cell
+        (core/counters.py).  ``timing_key`` gates the full-stream digest
+        comparison: streams are only required to be identical among cells
+        with the same device count, topology, congestion seed, and fault
+        fork (firmware cells fork their fault stream by the
+        backend-DEPENDENT label, so fault-injected firmware streams
+        legitimately differ per backend; serving cells fork by the
+        backend-free timing label and stay comparable).  The functional
+        digest has no such gate — retired tokens/requests/doorbells are
+        invariant across backends AND scales."""
+        from repro.core import counters as cc
+        banks = cc.counter_banks(target)
+        return {
+            "digest": cc.merged_digest(banks),
+            "totals": cc.merged_totals(banks),
+            "functional": cc.functional_digest(banks),
+            "timing_key": (cell.devices, cell._topo_kind,
+                           repr(cell.congestion), fork_label),
+        }
 
     @staticmethod
     def _feed_coverage(cov: CoverageModel, log, plan: Optional[FaultPlan],
@@ -537,6 +581,10 @@ class CoVerifySession:
             profile=target.profiler(cell.label) if self.profile else None,
             coverage=cov,
             slo=slo,
+            counters=(self._cell_counters(
+                target, cell,
+                cell.timing_label if plan is not None else None)
+                if err is None else None),
         )
 
     @staticmethod
@@ -591,6 +639,9 @@ class CoVerifySession:
             links=fab.link_stats(),
             profile=fab.profiler(cell.label) if self.profile else None,
             coverage=cov,
+            counters=(self._cell_counters(
+                fab, cell, cell.label if plan is not None else None)
+                if err is None else None),
         )
 
     def run(self, max_workers: Optional[int] = None,
@@ -629,6 +680,7 @@ class CoVerifySession:
 
         groups: Dict[Tuple, Dict[str, Dict[str, np.ndarray]]] = {}
         members: Dict[Tuple, Dict[str, SweepCell]] = {}
+        res_groups: Dict[Tuple, Dict[str, CellResult]] = {}
         labels: Dict[Tuple, str] = {}
         for r in results:
             # devices is intentionally NOT part of the key: cells at
@@ -637,17 +689,38 @@ class CoVerifySession:
             key = (r.cell.op, _config_key(r.cell.config))
             groups.setdefault(key, {})[r.cell.group_member] = r.outputs
             members.setdefault(key, {})[r.cell.group_member] = r.cell
+            res_groups.setdefault(key, {})[r.cell.group_member] = r
             cfg = ",".join(f"{k}={v}"
                            for k, v in sorted(r.cell.config.items()))
             labels[key] = f"{r.cell.op}[{cfg}]"
+        # counter-diff oracle pre-check (core/counters.py): digest
+        # comparisons are O(1) against the full element-wise output diff
+        # below, so a divergent group is flagged — and handed to the
+        # bisection lane — before the expensive comparison even runs
+        divergences: Dict[str, Any] = {}
+        counter_mismatches: Dict[str, Any] = {}
+        for key, rs in res_groups.items():
+            mismatch = self._counter_precheck(rs)
+            if mismatch is None:
+                continue
+            counter_mismatches[labels[key]] = mismatch
+            if bisect_failures:
+                a, b = mismatch["pair"]
+                try:
+                    divergences[labels[key]] = self._bisect_cells(
+                        members[key][a], members[key][b])
+                except Exception as e:   # localization is best-effort —
+                    divergences[labels[key]] = (   # never fail the sweep
+                        f"bisect unavailable: {type(e).__name__}: {e}")
         eq = {labels[k]: compare_outputs(outs, tol=tol)
               for k, outs in groups.items() if len(outs) > 1}
-        divergences: Dict[str, Any] = {}
         if bisect_failures:
             for key, outs in groups.items():
                 rep = eq.get(labels[key])
                 if rep is None or rep.passed or not rep.divergences:
                     continue
+                if labels[key] in divergences:
+                    continue            # already localized by the oracle
                 pair = rep.divergences[0].pair
                 cells = members[key]
                 try:
@@ -657,7 +730,43 @@ class CoVerifySession:
                     divergences[labels[key]] = (   # never fail the sweep
                         f"bisect unavailable: {type(e).__name__}: {e}")
         return SweepReport(cells=results, equivalence=eq, wall_seconds=wall,
-                           divergences=divergences, coverage=self.coverage)
+                           divergences=divergences, coverage=self.coverage,
+                           counter_mismatches=counter_mismatches)
+
+    @staticmethod
+    def _counter_precheck(rs: Dict[str, "CellResult"]
+                          ) -> Optional[Dict[str, Any]]:
+        """Counter-diff oracle over one equivalence group: full-stream
+        digests must agree among cells sharing a timing key; functional
+        digests must agree across ALL members (any backend, any scale).
+        Returns a mismatch record ({pair, kind, totals}) or None."""
+        with_c = sorted((m, r) for m, r in rs.items()
+                        if r.counters is not None)
+        if len(with_c) < 2:
+            return None
+        pair: Optional[Tuple[str, str]] = None
+        kind = ""
+        by_tk: Dict[Tuple, List[Tuple[str, CellResult]]] = {}
+        for m, r in with_c:
+            by_tk.setdefault(r.counters["timing_key"], []).append((m, r))
+        for peers in by_tk.values():
+            ref_m, ref_r = peers[0]
+            for m, r in peers[1:]:
+                if r.counters["digest"] != ref_r.counters["digest"]:
+                    pair, kind = (ref_m, m), "stream"
+                    break
+            if pair is not None:
+                break
+        if pair is None:
+            ref_m, ref_r = with_c[0]
+            for m, r in with_c[1:]:
+                if r.counters["functional"] != ref_r.counters["functional"]:
+                    pair, kind = (ref_m, m), "functional"
+                    break
+        if pair is None:
+            return None
+        return {"pair": pair, "kind": kind,
+                "totals": {m: rs[m].counters["totals"] for m in pair}}
 
     def _bisect_cells(self, cell_a: SweepCell, cell_b: SweepCell,
                       checkpoint_interval: int = 8):

@@ -142,10 +142,17 @@ def _run_sweep(unit: WorkUnit) -> UnitResult:
     if summary["divergences"]:
         harvest = {"seed": unit.seed, "divergences": summary["divergences"],
                    "failures": summary["failures"]}
+    # always-on counter totals summed over the unit's cells (each cell
+    # already carries its oracle payload)
+    counters: Dict[str, float] = {}
+    for r in rep.cells:
+        for name, v in (r.counters or {}).get("totals", {}).items():
+            counters[name] = counters.get(name, 0) + v
     return UnitResult(
         uid=unit.uid, kind=unit.kind, ok=rep.passed, digest=h.hexdigest(),
         counts=cov.to_counts(), scenarios=len(rep.cells),
-        failures=summary["failures"][:8], harvest=harvest)
+        failures=summary["failures"][:8], harvest=harvest,
+        counters=counters)
 
 
 # --------------------------------------------------- open-loop serving SLO
@@ -228,10 +235,12 @@ def _run_serving_campaign(unit: WorkUnit) -> UnitResult:
     if failures:
         harvest = {"seed": unit.seed, "trace": trace.label,
                    "failures": failures[:8], "violations": violations[:8]}
+    from repro.core.counters import counter_banks, merged_totals
     return UnitResult(
         uid=unit.uid, kind=unit.kind, ok=not failures, digest=digest,
         counts=cov.to_counts(), scenarios=len(trace.arrivals),
-        failures=failures[:8], harvest=harvest)
+        failures=failures[:8], harvest=harvest,
+        counters=merged_totals(counter_banks(target)))
 
 
 def _serving_target(*, devices: int, max_slots: int, max_len: int,
@@ -283,10 +292,14 @@ def _run_golden(unit: WorkUnit) -> UnitResult:
         f"regenerated trace diverges from committed {golden_path.name} "
         f"({len(run.lines)} live lines vs "
         f"{len(committed.splitlines()) if committed else 0} golden)"]
+    from repro.core.counters import counter_banks, merged_totals
+    target = getattr(getattr(run, "recording", None), "target", None)
     return UnitResult(
         uid=unit.uid, kind=unit.kind, ok=ok,
         digest=hashlib.sha256(text.encode()).hexdigest(),
-        counts={}, scenarios=1, failures=failures)
+        counts={}, scenarios=1, failures=failures,
+        counters=merged_totals(counter_banks(target))
+        if target is not None else {})
 
 
 EXECUTORS: Dict[str, Callable[[WorkUnit], UnitResult]] = {

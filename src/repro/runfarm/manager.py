@@ -61,6 +61,9 @@ class CampaignResult:
     coverage: CoverageModel           # merged across all units, uid order
     report: dict                      # campaign_report() payload
     bundles: List[Path]               # harvested failure bundles
+    # fleet-wide counter totals (core/counters.py), merged by name in
+    # uid order at each generation barrier — like coverage
+    counters: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def passed(self) -> bool:
@@ -118,6 +121,7 @@ class CampaignManager:
         bundles: List[Path] = []
         skipped = 0
         self.coverage = CoverageModel()
+        counter_totals: Dict[str, float] = {}
         gen_units = sorted(self.units, key=lambda u: u.uid)
         gen = 0
         try:
@@ -134,6 +138,9 @@ class CampaignManager:
                     rec = records[u.uid]
                     new = self.coverage.merge_counts(rec.get("counts")
                                                      or {})
+                    for cname, v in (rec.get("counters") or {}).items():
+                        counter_totals[cname] = (counter_totals.get(cname, 0)
+                                                 + v)
                     executed.append(u.uid)
                     if new:
                         parents.append(u)
@@ -169,11 +176,12 @@ class CampaignManager:
             records=records, uids=executed, coverage=self.coverage,
             trajectory=trajectory, worker_stats=worker_stats,
             skipped=skipped, respawned=self._respawned,
-            final_digest=digest)
+            final_digest=digest, counter_totals=counter_totals)
         write_report(self.dir / "report.json", report)
         return CampaignResult(digest=digest, uids=sorted(executed),
                               records=records, coverage=self.coverage,
-                              report=report, bundles=bundles)
+                              report=report, bundles=bundles,
+                              counters=counter_totals)
 
     # -------------------------------------------------- generation driving
     def _run_generation(self, units: List[WorkUnit],

@@ -17,7 +17,9 @@ def campaign_report(*, seed: int, workers: int, wall_seconds: float,
                     records: Dict[str, dict], uids: List[str],
                     coverage, trajectory: List[dict],
                     worker_stats: Dict[int, dict], skipped: int,
-                    respawned: int, final_digest: str) -> dict:
+                    respawned: int, final_digest: str,
+                    counter_totals: Optional[Dict[str, float]] = None
+                    ) -> dict:
     recs = [records[u] for u in sorted(uids)]
     scenarios = sum(int(r.get("scenarios", 0)) for r in recs)
     busy = sum(float(w.get("busy_seconds", 0.0))
@@ -40,6 +42,12 @@ def campaign_report(*, seed: int, workers: int, wall_seconds: float,
             "harvested": sorted(r["uid"] for r in recs if r.get("harvest")),
             "coverage": coverage.summary() if coverage is not None else None,
             "trajectory": trajectory,
+            # fleet-wide sampled-counter totals (core/counters.py):
+            # merged by name in uid order, so byte-identical at any
+            # worker count — part of the determinism-gated slice
+            "counters": {
+                n: (round(v, 6) if isinstance(v, float) else v)
+                for n, v in sorted((counter_totals or {}).items())},
         },
         "timing": {
             "workers": workers,

@@ -79,6 +79,10 @@ class UnitResult:
     failures: List[str] = dataclasses.field(default_factory=list)
     harvest: Optional[dict] = None      # shrunk repro / divergence bundle
     worker: int = -1
+    # sampled performance-counter totals (core/counters.py), name ->
+    # cumulative value summed over the unit's banks; merged fleet-wide in
+    # uid order at the generation barrier, like coverage counts
+    counters: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def record(self, payload_hash: str) -> dict:
         """The JSONL store record (one line, sort_keys canonical)."""
@@ -90,6 +94,10 @@ class UnitResult:
                "worker": self.worker}
         if self.harvest is not None:
             rec["harvest"] = self.harvest
+        if self.counters:
+            rec["counters"] = {
+                n: (round(v, 6) if isinstance(v, float) else v)
+                for n, v in self.counters.items()}
         return rec
 
 

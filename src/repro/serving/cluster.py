@@ -25,6 +25,9 @@ import numpy as np
 from repro.core.bridge import MemoryBridge
 from repro.core.congestion import (CongestionConfig, CongestionResult,
                                    LinkModel)
+from repro.core.counters import (CounterBank, CounterSpec,
+                                 register_link_counters,
+                                 register_switch_port_counters)
 from repro.core.fabric import FABRIC_LINK
 from repro.core.registers import RO, RegisterFile
 from repro.core.switch import SwitchFabric
@@ -138,6 +141,18 @@ class ClusterServingEngine:
         self.completed = 0
         self._written: Set[Tuple[int, int]] = set()   # (engine, rid) done
         self.placement: Dict[int, int] = {}     # rid -> engine index
+        # front-side counter banks (core/counters.py): the shared host
+        # channel plus one bank per switch port when a topology is routed
+        hb = CounterBank("cluster/host")
+        register_link_counters(hb, self.host_link)
+        hb.register(CounterSpec("transactions", "events"),
+                    probe=lambda: self.log.n_txs)
+        self._counter_banks: List[CounterBank] = [hb]
+        if self.switch is not None:
+            for sp in self.switch.ports:
+                sb = CounterBank(f"cluster/sw:{sp.label}")
+                register_switch_port_counters(sb, sp)
+                self._counter_banks.append(sb)
 
     def reset(self, fault_plan=None) -> None:
         """Fresh cluster state at warm-jit cost (mirrors
@@ -187,7 +202,12 @@ class ClusterServingEngine:
             if port is not None:
                 port.release(batch.rec["complete"].tolist())
         self.time = max(self.time, t)
+        self._tick_counters(self.time)
         return t
+
+    def _tick_counters(self, now: float) -> None:
+        for b in self._counter_banks:
+            b.tick(now)
 
     # ------------------------------------------------------ front protocol
     def _on_doorbell(self, _data: int) -> None:
@@ -261,6 +281,7 @@ class ClusterServingEngine:
                             else tick)
         active = self._n_active()
         self.csr.hw_set("ACTIVE", active)
+        self._tick_counters(self.clock)
         return active
 
     def _writeback(self, i: int, eng: ServingEngine, tick: float) -> None:
@@ -327,6 +348,7 @@ class ClusterServingEngine:
             "completed": self.completed,
             "written": set(self._written),
             "placement": dict(self.placement),
+            "counters": [b.get_state() for b in self._counter_banks],
         }
 
     def set_state(self, state: dict) -> None:
@@ -344,6 +366,8 @@ class ClusterServingEngine:
         self.completed = state["completed"]
         self._written = set(state["written"])
         self.placement = dict(state["placement"])
+        for b, s in zip(self._counter_banks, state.get("counters") or []):
+            b.set_state(s)
 
     # ---------------------------------------------------------- inspection
     @property
@@ -376,6 +400,14 @@ class ClusterServingEngine:
 
     def congestion_stats(self) -> CongestionResult:
         return self.fabric_stats()
+
+    def counter_banks(self) -> List[CounterBank]:
+        """All cluster counter banks: front (host channel + switch ports)
+        followed by every device-local engine's banks, engine order."""
+        out = list(self._counter_banks)
+        for eng in self.engines:
+            out.extend(eng.counter_banks())
+        return out
 
     def digest(self) -> str:
         """Reproducibility witness over the front log and device logs."""

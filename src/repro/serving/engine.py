@@ -24,6 +24,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.bridge import MemoryBridge
 from repro.core.congestion import CongestionConfig, CongestionResult
+from repro.core.counters import CounterBank, CounterSpec
 from repro.core.registers import RO, RegisterFile
 from repro.models.transformer import (RunFlags, ShardCtx, cache_insert,
                                       init_cache, make_decode_fn,
@@ -158,8 +159,34 @@ class ServingEngine:
         self.mem.alloc("tokens_out", (self.max_slots, self.max_len),
                        np.int32)
 
+        # always-on sampled counters (core/counters.py).  Functional-
+        # scope counters (doorbells, requests/tokens retired) have
+        # cumulative totals invariant across 1/2/4 devices — the
+        # cross-scale side of the counter-diff oracle; the KV gauges are
+        # per-engine timing-scope.  Rebuilt here because the pool and
+        # bridge the probes read are rebuilt on every reset.
+        self.counters = CounterBank("serving")
+        self.counters.register(
+            CounterSpec("doorbells", "events", scope="functional"))
+        self.counters.register(
+            CounterSpec("requests_retired", "events", scope="functional"))
+        self.counters.register(
+            CounterSpec("tokens_retired", "tokens", scope="functional"))
+        if self.kv_pool is not None:
+            pool = self.kv_pool
+            self.counters.register(
+                CounterSpec("kv_pages_in_use", "pages", monotone=False),
+                lambda: pool.in_use)
+            self.counters.register(CounterSpec("kv_peak_pages", "pages"),
+                                   lambda: pool.peak_in_use)
+            self.counters.register(CounterSpec("kv_deferrals", "events"),
+                                   lambda: pool.deferrals)
+            self.counters.register(CounterSpec("kv_releases", "events"),
+                                   lambda: pool.releases)
+
     # -------------------------------------------------- register protocol
     def _on_doorbell(self, _data: int) -> None:
+        self.counters.inc("doorbells")
         rid = self.csr.hw_get("SUBMIT_ID")
         ln = self.csr.hw_get("SUBMIT_LEN")
         mx = self.csr.hw_get("SUBMIT_MAXNEW")
@@ -235,8 +262,15 @@ class ServingEngine:
         as many pending requests as free slots and KV pages allow, then
         decode the whole batch, advancing the modeled clock by per-step
         costs.  Returns number of active slots."""
-        if self.batching == "continuous":
-            return self._step_continuous()
+        n = (self._step_continuous() if self.batching == "continuous"
+             else self._step_storm())
+        # sample after the tick's state updates, on the front of the two
+        # time domains (storm mode never advances self.clock; the DMA
+        # clock still does)
+        self.counters.tick(max(self.clock, self.mem.time))
+        return n
+
+    def _step_storm(self) -> int:
         slot = self._free_slot()
         if self.pending and slot is not None:
             req = self.pending.popleft()
@@ -331,6 +365,7 @@ class ServingEngine:
         """Fast-forward the modeled clock to ``t`` (idle-gap skip by the
         open-loop driver; never moves time backwards)."""
         self.clock = max(self.clock, float(t))
+        self.counters.tick(max(self.clock, self.mem.time))
 
     def _retire(self, i: int) -> None:
         """Complete slot i: tokens_out DMA writeback, slot free,
@@ -338,6 +373,8 @@ class ServingEngine:
         s = self.slots[i]
         s.done = True
         s.t_done = self.clock
+        self.counters.inc("requests_retired")
+        self.counters.inc("tokens_retired", len(s.out_tokens))
         if self.kv_pool is not None:
             self.kv_pool.release(s.rid)
         # row-sized DMA writeback: only slot i's tokens move
@@ -375,6 +412,11 @@ class ServingEngine:
         the engine runs congestion-free)."""
         return self.mem.congestion_stats()
 
+    def counter_banks(self):
+        """All counter banks owned by this engine (core/counters.py):
+        the serving-lifecycle bank plus the DMA bridge's link bank."""
+        return [self.counters, self.mem.counters]
+
     def profiler(self, label: str = "serving"):
         """Data-movement profile of the serving DMA traffic
         (core/profiler.py): prompt-upload vs token-writeback attribution
@@ -405,6 +447,7 @@ class ServingEngine:
                         if self.kv_pool is not None else None),
             "mem": self.mem.get_state(),    # includes the shared log
             "csr": self.csr.get_state(),
+            "counters": self.counters.get_state(),
         }
 
     def set_state(self, state: dict) -> None:
@@ -422,6 +465,9 @@ class ServingEngine:
             self.kv_pool.set_state(pool_state)
         self.mem.set_state(state["mem"])
         self.csr.set_state(state["csr"])
+        cs = state.get("counters")
+        if cs is not None:
+            self.counters.set_state(cs)
 
     def run_until_done(self, max_ticks: int = 10_000) -> None:
         self.csr.hw_set("STATUS", 1)

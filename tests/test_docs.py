@@ -50,6 +50,23 @@ def test_profiling_docs_transcript(tmp_path):
     assert (tmp_path / "profile_cnn.trace.json").exists()
 
 
+def test_instrumentation_docs_transcript():
+    """The always-on counter walkthrough transcript in
+    docs/instrumentation.md is the verbatim output of
+    examples/counter_dashboard.py."""
+    expected = _fenced_transcript(
+        DOCS / "instrumentation.md",
+        "prints (deterministic — modeled cycles only, no wall time):")
+    spec = importlib.util.spec_from_file_location(
+        "counter_dashboard", ROOT / "examples" / "counter_dashboard.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        mod.main([])
+    assert buf.getvalue().splitlines() == expected
+
+
 def test_topology_docs_transcript():
     """The routed-interconnect tour transcript in docs/topology.md is the
     verbatim output of examples/topology_tour.py."""

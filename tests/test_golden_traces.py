@@ -337,6 +337,21 @@ TRACES = {
 # jit the smoke model
 SLOW = {"cluster_serving_storm", "cluster_open_loop_serving"}
 
+# Golden COUNTER corpus (core/counters.py): the always-on sampled
+# counter streams of two structurally different runs — the single-device
+# bridge and the 8-device routed torus — committed alongside the traces.
+# Byte-identity here pins the whole instrumentation layer: bank order,
+# column declarations, boundary times and every sampled value.
+COUNTER_TRACES = ("single_device_launch", "fabric_torus_all_reduce")
+
+
+def _counter_lines(run: GoldenRun) -> List[str]:
+    from repro.core.counters import counter_banks
+    lines: List[str] = []
+    for bank in counter_banks(run.recording.target):
+        lines += bank.canonical()
+    return lines
+
 
 def _mark(name):
     return pytest.param(name, marks=pytest.mark.slow) if name in SLOW \
@@ -414,6 +429,28 @@ def test_full_range_replay_reproduces_trace(name):
     assert lines == run.lines
 
 
+@pytest.mark.parametrize("name", COUNTER_TRACES)
+def test_counter_stream_matches_golden(name):
+    """The sampled counter streams of the committed counter corpus are
+    byte-identical to tests/golden/<name>.counters."""
+    golden = (GOLDEN / f"{name}.counters").read_text().splitlines()
+    live = _counter_lines(TRACES[name]())
+    if live == golden:
+        return
+    n = min(len(live), len(golden))
+    for i in range(n):
+        if live[i] != golden[i]:
+            pytest.fail(
+                f"{name}: first divergent counter line at {i + 1}:\n"
+                f"  golden: {golden[i]}\n"
+                f"  live:   {live[i]}\n"
+                f"(regenerate with `python tests/test_golden_traces.py "
+                f"--regen` ONLY for intentional timing-model or "
+                f"instrumentation changes)")
+    pytest.fail(f"{name}: counter stream lengths diverge "
+                f"(golden {len(golden)}, live {len(live)})")
+
+
 def test_single_device_digest_matches_canonical():
     run = single_device_run()
     fb = run.recording.target
@@ -447,6 +484,11 @@ if __name__ == "__main__":
     GOLDEN.mkdir(exist_ok=True)
     for name, fn in TRACES.items():
         path = GOLDEN / f"{name}.trace"
-        lines = fn().lines
-        path.write_text("\n".join(lines) + "\n")
-        print(f"wrote {path} ({len(lines)} lines)")
+        run = fn()
+        path.write_text("\n".join(run.lines) + "\n")
+        print(f"wrote {path} ({len(run.lines)} lines)")
+        if name in COUNTER_TRACES:
+            cpath = GOLDEN / f"{name}.counters"
+            clines = _counter_lines(run)
+            cpath.write_text("\n".join(clines) + "\n")
+            print(f"wrote {cpath} ({len(clines)} lines)")

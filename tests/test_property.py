@@ -449,3 +449,25 @@ def test_open_loop_admission_invariants(plan):
     import test_serving_slo as slo
     entries, n_pages, page_size = plan
     slo.check_admission_invariants(entries, n_pages, page_size)
+
+
+# ----------------------------------------------------- counter instrumentation
+
+
+@given(replay_programs(), st.integers(1, 7), st.data())
+@settings(max_examples=20, deadline=None)
+def test_counter_stream_replay_and_monotonicity(case, interval, data):
+    """Arbitrary recorded op sequence, at ANY checkpoint interval: every
+    counter declared ``monotone`` is non-decreasing across samples, and
+    replaying ANY [lo, hi) window regenerates a counter stream that is an
+    exact prefix of the recorded one (full-range replay regenerates the
+    whole stream) — the always-on instrumentation is as replayable as the
+    transaction log it rides on.  The deterministic fallback for
+    environments without hypothesis is
+    tests/test_counters.py::test_counter_replay_invariants_randomized."""
+    import test_counters as tc
+    shapes, ops, _, _ = case
+    n = len(shapes) + len(ops)
+    lo = data.draw(st.integers(0, n), label="lo")
+    hi = data.draw(st.integers(lo, n), label="hi")
+    tc.check_counter_replay_invariants(case, interval, lo, hi)
